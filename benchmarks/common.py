@@ -1,0 +1,33 @@
+"""Shared benchmark utilities: repeated app runs + CSV emission."""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Any, Callable
+
+from repro.apps import run_app
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.engine import Cluster
+
+
+def repeated(fn: Callable[[int], Any], repeats: int) -> list[Any]:
+    return [fn(i) for i in range(repeats)]
+
+
+def mean_sem(xs: list[float]) -> tuple[float, float]:
+    if len(xs) <= 1:
+        return (xs[0] if xs else 0.0), 0.0
+    return statistics.mean(xs), statistics.stdev(xs) / len(xs) ** 0.5
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def run_once(app: str, *, mode: str, injector, cluster_fn, default_pool,
+             scale: str = "tiny", retries: int = 2, timeout: float = 120.0):
+    handler = wrath_retry_handler() if mode == "wrath" else None
+    return run_app(app, cluster_fn(), retry_handler=handler,
+                   monitor=MonitoringDatabase(), injector=injector,
+                   scale=scale, default_pool=default_pool,
+                   default_retries=retries, wait_timeout=timeout)

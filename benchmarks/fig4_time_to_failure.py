@@ -1,0 +1,46 @@
+"""Fig 4: normalized time-to-failure, apps × non-resolvable failure types.
+
+WRATH identifies destined-to-fail tasks and fails fast; baseline burns
+retries first.  Reported value = TTF(WRATH) / TTF(baseline) (< 1 is
+better; paper: 0.5–0.8).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, mean_sem, run_once
+from repro.engine import Cluster
+from repro.injection import FailureInjector
+
+APPS = ("mapreduce", "cholesky", "docking", "moldesign", "fedlearn")
+FAILURES = ("zero_division", "exception", "worker_killed", "dependency")
+
+
+def run(repeats: int = 3, rate: float = 0.3) -> list[str]:
+    rows: list[str] = []
+    for app in APPS:
+        for failure in FAILURES:
+            ratios, wrath_ttfs = [], []
+            for r in range(repeats):
+                tag = f"{app}:{failure}:{r}"
+                inj_w = FailureInjector(failure, rate=rate, seed=r, app_tag=tag,
+                                        only_parents=failure == "dependency")
+                rw = run_once(app, mode="wrath", injector=inj_w,
+                              cluster_fn=lambda: Cluster.homogeneous(4),
+                              default_pool=None)
+                inj_b = FailureInjector(failure, rate=rate, seed=r, app_tag=tag,
+                                        only_parents=failure == "dependency")
+                rb = run_once(app, mode="baseline", injector=inj_b,
+                              cluster_fn=lambda: Cluster.homogeneous(4),
+                              default_pool=None)
+                if rw.time_to_failure and rb.time_to_failure:
+                    ratios.append(rw.time_to_failure / rb.time_to_failure)
+                    wrath_ttfs.append(rw.time_to_failure)
+            if ratios:
+                m, sem = mean_sem(ratios)
+                ttf_m, _ = mean_sem(wrath_ttfs)
+                rows.append(csv_row(
+                    f"fig4_ttf_{app}_{failure}", ttf_m * 1e6,
+                    f"normalized_ttf={m:.3f}±{sem:.3f}"))
+            else:
+                rows.append(csv_row(f"fig4_ttf_{app}_{failure}", 0.0,
+                                    "no_failures_triggered"))
+    return rows

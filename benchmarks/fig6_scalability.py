@@ -1,0 +1,40 @@
+"""Fig 6: application success rate vs number of inadequate nodes.
+
+The number of nodes lacking memory (or the package) grows; one adequate
+node remains.  Paper: WRATH keeps app success > 90% at every size;
+baseline fails continuously.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, mean_sem, run_once
+from repro.engine import Cluster
+from repro.injection import FailureInjector
+
+
+def _cluster(failure: str, bad_nodes: int) -> Cluster:
+    if failure == "import":
+        return Cluster.paper_testbed(small_nodes=bad_nodes, big_nodes=1,
+                                     with_pkg_pool=True, package="wrathpkg")
+    return Cluster.paper_testbed(small_nodes=bad_nodes, big_nodes=1)
+
+
+def run(repeats: int = 4, rate: float = 0.3,
+        sizes: tuple[int, ...] = (2, 4, 8)) -> list[str]:
+    rows: list[str] = []
+    for failure in ("import", "memory"):
+        pool = "no-pkg" if failure == "import" else "small-mem"
+        for n_bad in sizes:
+            for mode in ("wrath", "baseline"):
+                successes = []
+                for r in range(repeats):
+                    inj = FailureInjector(failure, rate=rate, seed=r,
+                                          app_tag=f"f6:{failure}:{n_bad}:{r}")
+                    res = run_once("mapreduce", mode=mode, injector=inj,
+                                   cluster_fn=lambda f=failure, n=n_bad: _cluster(f, n),
+                                   default_pool=pool, retries=3)
+                    successes.append(1.0 if res.success else 0.0)
+                m, sem = mean_sem(successes)
+                rows.append(csv_row(
+                    f"fig6_appsr_{failure}_{mode}_nodes{n_bad}", 0.0,
+                    f"app_success_rate={m:.3f}±{sem:.3f}"))
+    return rows

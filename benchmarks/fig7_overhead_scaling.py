@@ -1,0 +1,27 @@
+"""Fig 7: WRATH overhead ratio vs cluster size (paper: flat, < 2%)."""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, mean_sem, run_once
+from repro.engine import Cluster
+from repro.injection import FailureInjector
+
+
+def run(repeats: int = 3, rate: float = 0.1,
+        sizes: tuple[int, ...] = (2, 4, 8, 16)) -> list[str]:
+    rows: list[str] = []
+    for n_nodes in sizes:
+        overheads = []
+        for r in range(repeats):
+            inj = FailureInjector("memory", rate=rate, seed=r,
+                                  app_tag=f"f7:{n_nodes}:{r}")
+            res = run_once(
+                "mapreduce", mode="wrath", injector=inj,
+                cluster_fn=lambda n=n_nodes: Cluster.paper_testbed(
+                    small_nodes=n, big_nodes=1),
+                default_pool="small-mem", retries=3, scale="small")
+            if res.success:
+                overheads.append(res.overhead_ratio)
+        m, sem = mean_sem(overheads) if overheads else (0.0, 0.0)
+        rows.append(csv_row(f"fig7_overhead_nodes{n_nodes}", 0.0,
+                            f"overhead_ratio={m:.5f}±{sem:.5f}"))
+    return rows

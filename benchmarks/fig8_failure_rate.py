@@ -1,0 +1,31 @@
+"""Fig 8: Cholesky task success rate vs memory-failure rate (0.1–0.3).
+
+16 small-memory nodes + 1 large-memory node, like the paper.  WRATH holds
+task SR high via hierarchical retry; baseline degrades as rate rises.
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, mean_sem, run_once
+from repro.engine import Cluster
+from repro.injection import FailureInjector
+
+
+def run(repeats: int = 3,
+        rates: tuple[float, ...] = (0.1, 0.2, 0.3)) -> list[str]:
+    rows: list[str] = []
+    for rate in rates:
+        for mode in ("wrath", "baseline"):
+            srs = []
+            for r in range(repeats):
+                inj = FailureInjector("memory", rate=rate, seed=r,
+                                      app_tag=f"f8:{rate}:{r}")
+                res = run_once(
+                    "cholesky", mode=mode, injector=inj,
+                    cluster_fn=lambda: Cluster.paper_testbed(
+                        small_nodes=16, big_nodes=1),
+                    default_pool="small-mem", retries=2, scale="small")
+                srs.append(res.task_success_rate)
+            m, sem = mean_sem(srs)
+            rows.append(csv_row(f"fig8_tasksr_{mode}_rate{rate}", 0.0,
+                                f"task_success_rate={m:.3f}±{sem:.3f}"))
+    return rows

@@ -1,0 +1,80 @@
+"""Generate the EXPERIMENTS.md roofline tables from dry-run JSONs.
+
+Baseline JSONs (benchmarks/results/dryrun_baseline) were measured before
+the all-reduce bytes were weighted 2× (physical RS+AG decomposition); this
+script re-derives their collective term with the same convention so the
+baseline↔optimized comparison is apples-to-apples.
+"""
+from __future__ import annotations
+
+import json
+import sys
+from pathlib import Path
+
+HERE = Path(__file__).resolve().parent
+CHIP_LINK = 50e9
+PEAK = 197e12
+
+
+def corrected(cell: dict, *, ar_was_1x: bool) -> dict:
+    r = dict(cell["roofline"])
+    cb = dict(r.get("coll_breakdown", {}))
+    total = sum(v for k, v in cb.items() if k != "total")
+    if ar_was_1x and "all-reduce" in cb:
+        total += cb["all-reduce"]          # count AR twice
+    chips = r["chips"]
+    r["collective_s"] = total / (chips * CHIP_LINK)
+    t = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    mf = float(r["model_flops"])
+    r["roofline_fraction"] = mf / (chips * PEAK * t) if t else 0.0
+    terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+             "collective": r["collective_s"]}
+    r["dominant"] = max(terms, key=terms.get)
+    return r
+
+
+def load(directory: Path, mesh: str, *, ar_was_1x: bool) -> list[dict]:
+    out = []
+    for p in sorted(directory.glob(f"*__{mesh}.json")):
+        d = json.loads(p.read_text())
+        if d["status"] != "ok":
+            continue
+        out.append(corrected(d, ar_was_1x=ar_was_1x))
+    return out
+
+
+def table(cells: list[dict], *, kernel_col: bool = False) -> str:
+    hdr = ("| arch | shape | chips | compute_s | memory_s | collective_s | "
+           "dominant | useful | roofline_frac |")
+    sep = "|---|---|---|---|---|---|---|---|---|"
+    if kernel_col:
+        hdr += " frac_w/kernel | HBM GB/dev |"
+        sep += "---|---|"
+    rows = [hdr, sep]
+    for r in cells:
+        line = (f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+                f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+                f"{r['collective_s']:.4f} | {r['dominant']} | "
+                f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} |")
+        if kernel_col:
+            line += (f" {r.get('roofline_fraction_kernel', float(r['roofline_fraction'])):.4f} "
+                     f"| {r['per_device_hbm_gb']:.2f} |")
+        rows.append(line)
+    return "\n".join(rows)
+
+
+def main() -> None:
+    base = load(HERE / "results" / "dryrun_baseline", "single", ar_was_1x=True)
+    opt_s = load(HERE / "results" / "dryrun", "single", ar_was_1x=False)
+    opt_m = load(HERE / "results" / "dryrun", "multi", ar_was_1x=False)
+    print("## Optimized — single-pod (16×16 = 256 chips)\n")
+    print(table(opt_s, kernel_col=True))
+    print("\n## Optimized — multi-pod (2×16×16 = 512 chips)\n")
+    print(table(opt_m, kernel_col=True))
+    print("\n## Baseline (pre-hillclimb, AR re-weighted 2× for comparability)"
+          " — single-pod\n")
+    print(table(base))
+
+
+if __name__ == "__main__":
+    main()

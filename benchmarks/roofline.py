@@ -1,0 +1,62 @@
+"""Roofline table: three terms per (arch × shape × mesh) from the dry-run
+artifacts (benchmarks/results/dryrun/*.json).  Run the dry-run first:
+
+    python -m repro.launch.dryrun --all --mesh both
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from benchmarks.common import csv_row
+
+RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
+
+
+def load_cells(mesh: str | None = None) -> list[dict]:
+    cells = []
+    for p in sorted(RESULTS.glob("*.json")):
+        d = json.loads(p.read_text())
+        if d.get("status") != "ok":
+            continue
+        if mesh and d["roofline"]["mesh"] != mesh:
+            continue
+        cells.append(d)
+    return cells
+
+
+def run(mesh: str = "single") -> list[str]:
+    rows: list[str] = []
+    cells = load_cells(mesh)
+    if not cells:
+        return [csv_row("roofline_missing", 0.0,
+                        "run `python -m repro.launch.dryrun --all` first")]
+    for d in cells:
+        r = d["roofline"]
+        t_bound = max(r["compute_s"], r["memory_s"], r["collective_s"])
+        rows.append(csv_row(
+            f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+            t_bound * 1e6,
+            f"dominant={r['dominant']};compute_s={r['compute_s']};"
+            f"memory_s={r['memory_s']};collective_s={r['collective_s']};"
+            f"useful_ratio={r['useful_ratio']};"
+            f"roofline_fraction={r['roofline_fraction']};"
+            f"hbm_gb={r['per_device_hbm_gb']}"))
+    return rows
+
+
+def markdown_table(mesh: str = "single") -> str:
+    """EXPERIMENTS.md §Roofline content."""
+    cells = load_cells(mesh)
+    out = ["| arch | shape | chips | compute_s | memory_s | collective_s | "
+           "dominant | model_flops | useful | roofline_frac | HBM GB/dev |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for d in cells:
+        r = d["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['chips']} | "
+            f"{r['compute_s']:.4f} | {r['memory_s']:.4f} | "
+            f"{r['collective_s']:.4f} | {r['dominant']} | {r['model_flops']} | "
+            f"{r['useful_ratio']:.3f} | {r['roofline_fraction']:.4f} | "
+            f"{r['per_device_hbm_gb']:.2f} |")
+    return "\n".join(out)

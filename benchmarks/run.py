@@ -1,0 +1,50 @@
+"""Benchmark harness: one module per paper table/figure + roofline +
+training-plane recovery.  Prints ``name,us_per_call,derived`` CSV.
+
+    PYTHONPATH=src python -m benchmarks.run            # everything
+    PYTHONPATH=src python -m benchmarks.run fig4 fig8  # a subset
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (
+    fig4_time_to_failure,
+    fig5_overhead,
+    fig6_scalability,
+    fig7_overhead_scaling,
+    fig8_failure_rate,
+    roofline,
+    table4_success_rates,
+    train_recovery,
+)
+
+SUITES = {
+    "fig4": fig4_time_to_failure.run,
+    "fig5": fig5_overhead.run,
+    "table4": table4_success_rates.run,
+    "fig6": fig6_scalability.run,
+    "fig7": fig7_overhead_scaling.run,
+    "fig8": fig8_failure_rate.run,
+    "roofline": roofline.run,
+    "train_recovery": train_recovery.run,
+}
+
+
+def main() -> None:
+    picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    print("name,us_per_call,derived")
+    for name in picks:
+        t0 = time.time()
+        try:
+            for row in SUITES[name]():
+                print(row, flush=True)
+        except Exception as e:  # noqa: BLE001 - one suite must not kill the run
+            print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}", flush=True)
+        print(f"{name}_wall,{(time.time() - t0) * 1e6:.0f},suite_seconds="
+              f"{time.time() - t0:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

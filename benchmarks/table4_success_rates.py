@@ -1,0 +1,42 @@
+"""Table IV: task & retry success rates, MapReduce, import/memory failures.
+
+Paper: WRATH retry SR 0.53/0.75 and task SR 0.43/0.47 vs baseline 0.22/0.24
+retry SR and 0.00 task SR (tasks can only succeed on the right executor).
+"""
+from __future__ import annotations
+
+from benchmarks.common import csv_row, mean_sem, run_once
+from repro.engine import Cluster
+from repro.injection import FailureInjector
+
+
+def _cluster(failure: str) -> Cluster:
+    if failure == "import":
+        return Cluster.paper_testbed(small_nodes=3, big_nodes=1,
+                                     with_pkg_pool=True, package="wrathpkg")
+    return Cluster.paper_testbed(small_nodes=3, big_nodes=1)
+
+
+def _pool(failure: str) -> str:
+    return "no-pkg" if failure == "import" else "small-mem"
+
+
+def run(repeats: int = 4, rate: float = 0.4) -> list[str]:
+    rows: list[str] = []
+    for failure in ("import", "memory"):
+        for mode in ("wrath", "baseline"):
+            task_srs, retry_srs = [], []
+            for r in range(repeats):
+                inj = FailureInjector(failure, rate=rate, seed=r,
+                                      app_tag=f"t4:{failure}:{r}")
+                res = run_once("mapreduce", mode=mode, injector=inj,
+                               cluster_fn=lambda f=failure: _cluster(f),
+                               default_pool=_pool(failure), scale="small")
+                task_srs.append(res.task_success_rate)
+                retry_srs.append(res.retry_success_rate)
+            t, ts = mean_sem(task_srs)
+            rr, rs = mean_sem(retry_srs)
+            rows.append(csv_row(
+                f"table4_{mode}_{failure}", 0.0,
+                f"retry_sr={rr:.3f}±{rs:.3f};task_sr={t:.3f}±{ts:.3f}"))
+    return rows

@@ -1,0 +1,50 @@
+"""Training-plane resilience benchmark (beyond-paper, DESIGN.md §2).
+
+Measures: (a) supervision overhead of WRATH on a failure-free run,
+(b) recovery cost (extra wall time + replayed steps) under injected
+host-loss / NaN / straggler events, (c) that the loss trajectory still
+converges.
+"""
+from __future__ import annotations
+
+import shutil
+import time
+
+from benchmarks.common import csv_row
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.train import TrainEvent, WrathTrainSupervisor
+
+
+def _mk(tag: str, steps: int = 30):
+    shutil.rmtree(f"/tmp/wrath_bench_{tag}", ignore_errors=True)
+    cfg = get_smoke_config("granite_3_2b")
+    return WrathTrainSupervisor(
+        cfg, OptConfig(lr=5e-3, warmup_steps=5, total_steps=steps),
+        n_hosts=3, global_batch=6, seq_len=32,
+        ckpt_dir=f"/tmp/wrath_bench_{tag}", ckpt_every=5)
+
+
+def run(steps: int = 30) -> list[str]:
+    rows: list[str] = []
+    # (a) failure-free
+    sup = _mk("clean", steps)
+    t0 = time.time()
+    rep = sup.run(steps)
+    clean_s = time.time() - t0
+    rows.append(csv_row("train_clean", clean_s / max(rep.steps_completed, 1) * 1e6,
+                        f"loss={rep.losses[0]:.3f}->{rep.losses[-1]:.3f}"))
+    # (b) faulted
+    sup = _mk("fault", steps)
+    events = [TrainEvent(step=8, kind="host_down", host="host01"),
+              TrainEvent(step=15, kind="nan"),
+              TrainEvent(step=22, kind="straggler", host="host02", factor=30)]
+    t0 = time.time()
+    rep = sup.run(steps, events=events)
+    fault_s = time.time() - t0
+    rows.append(csv_row(
+        "train_faulted", fault_s / max(rep.steps_completed, 1) * 1e6,
+        f"loss={rep.losses[0]:.3f}->{rep.losses[-1]:.3f};restores={rep.restores};"
+        f"speculations={rep.speculations};recoveries={len(rep.recoveries)};"
+        f"slowdown={fault_s / max(clean_s, 1e-9):.2f}x"))
+    return rows

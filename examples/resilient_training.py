@@ -1,0 +1,69 @@
+"""End-to-end WRATH-supervised training with injected failures.
+
+Trains a reduced-config model (any of the 10 assigned architectures) with
+the WRATH training supervisor while the run is hit by a host loss, a NaN
+loss, and a chronic straggler.  The run checkpoint-restarts, elastically
+re-meshes, denylists the straggler — and the loss still goes down.
+
+    PYTHONPATH=src python examples/resilient_training.py \
+        --arch granite-3-2b --steps 120 --d-model 256 --layers 4
+
+Scale --d-model/--layers up toward ~100M params if you have minutes to
+spare; the recovery behaviour is identical at every scale.
+"""
+import argparse
+import shutil
+
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.train import TrainEvent, WrathTrainSupervisor
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b")
+    ap.add_argument("--steps", type=int, default=120)
+    ap.add_argument("--d-model", type=int, default=128)
+    ap.add_argument("--layers", type=int, default=4)
+    ap.add_argument("--hosts", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--ckpt", default="/tmp/wrath_resilient_training")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    heads = max(4, cfg.n_heads)
+    cfg = cfg.scaled(d_model=args.d_model, n_layers=args.layers)
+
+    shutil.rmtree(args.ckpt, ignore_errors=True)
+    sup = WrathTrainSupervisor(
+        cfg, OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps),
+        n_hosts=args.hosts, global_batch=args.batch, seq_len=args.seq,
+        ckpt_dir=args.ckpt, ckpt_every=10)
+
+    third = args.steps // 3
+    events = [
+        TrainEvent(step=third, kind="host_down", host="host01"),
+        TrainEvent(step=third + 10, kind="nan"),
+        TrainEvent(step=2 * third, kind="straggler", host="host02", factor=40),
+    ]
+    print(f"training {cfg.name} (reduced: d={cfg.d_model}, L={cfg.n_layers}) "
+          f"for {args.steps} steps on {args.hosts} virtual hosts; injecting "
+          f"host-loss @ {third}, NaN @ {third+10}, straggler @ {2*third}")
+    rep = sup.run(args.steps, events=events)
+
+    print(f"\nsteps completed: {rep.steps_completed}")
+    print(f"loss: {rep.losses[0]:.3f} -> {rep.losses[-1]:.3f}")
+    print(f"checkpoint restores: {rep.restores}, speculations: "
+          f"{rep.speculations}, denylisted: {rep.denylisted}, "
+          f"surviving hosts: {rep.final_hosts}")
+    print("\nrecovery log:")
+    for r in rep.recoveries:
+        print(f"  step {r['step']:4d} {r['error']:28s} on {r['host']:8s} "
+              f"-> {r['action']} (rung {r['rung']})")
+    assert rep.losses[-1] < rep.losses[0], "loss did not improve"
+    print("\nresilient training complete — loss improved through failures.")
+
+
+if __name__ == "__main__":
+    main()

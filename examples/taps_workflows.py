@@ -1,0 +1,65 @@
+"""Run the five TaPS-analog applications under failure injection.
+
+Reproduces the paper's experimental setup in miniature: pick an app, a
+failure type and a rate; compare WRATH against Parsl-style baseline retry.
+
+    PYTHONPATH=src python examples/taps_workflows.py --failure memory --rate 0.3
+    PYTHONPATH=src python examples/taps_workflows.py --app cholesky \
+        --failure zero_division --rate 0.2
+"""
+import argparse
+
+from repro.apps import APPS, run_app
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.engine import Cluster
+from repro.injection import FAILURE_TYPES, FailureInjector, NoInjector
+
+
+def cluster_for(failure: str) -> tuple[Cluster, str | None]:
+    if failure == "import":
+        return (Cluster.paper_testbed(small_nodes=3, big_nodes=1,
+                                      with_pkg_pool=True, package="wrathpkg"),
+                "no-pkg")
+    if failure in ("memory", "ulimit"):
+        cl = Cluster.paper_testbed(small_nodes=3, big_nodes=1)
+        if failure == "ulimit":
+            for n in cl.pools["big-mem"].nodes:
+                n.ulimit_files = 2_000_000
+        return cl, "small-mem"
+    return Cluster.homogeneous(4), None
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--app", default="all", choices=["all", *sorted(APPS)])
+    ap.add_argument("--failure", default="memory",
+                    choices=["none", *FAILURE_TYPES])
+    ap.add_argument("--rate", type=float, default=0.3)
+    ap.add_argument("--scale", default="small")
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    apps = sorted(APPS) if args.app == "all" else [args.app]
+    hdr = (f"{'app':12s} {'mode':9s} {'ok':3s} {'makespan':>9s} {'ttf':>8s} "
+           f"{'task_sr':>8s} {'retry_sr':>9s} {'overhead':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for app in apps:
+        for mode in ("wrath", "baseline"):
+            cl, pool = cluster_for(args.failure)
+            inj = (NoInjector() if args.failure == "none" else
+                   FailureInjector(args.failure, rate=args.rate,
+                                   seed=args.seed, app_tag=f"{app}:{mode}"))
+            r = run_app(app, cl,
+                        retry_handler=wrath_retry_handler() if mode == "wrath" else None,
+                        monitor=MonitoringDatabase(), injector=inj,
+                        scale=args.scale, default_pool=pool,
+                        default_retries=2, wait_timeout=120)
+            ttf = f"{r.time_to_failure:.3f}" if r.time_to_failure else "-"
+            print(f"{app:12s} {mode:9s} {'Y' if r.success else 'N':3s} "
+                  f"{r.makespan:9.3f} {ttf:>8s} {r.task_success_rate:8.3f} "
+                  f"{r.retry_success_rate:9.3f} {r.overhead_ratio:9.5f}")
+
+
+if __name__ == "__main__":
+    main()

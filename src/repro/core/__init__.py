@@ -1,0 +1,67 @@
+"""WRATH core: failure taxonomy, monitoring, categorization, policy, retry.
+
+The paper's contribution (§III–§V) as a composable module: plug
+:func:`wrath_retry_handler` into a :class:`~repro.engine.dfk.DataFlowKernel`
+(task plane) or into the training supervisor (training plane).
+
+Re-exports are lazy (PEP 562) because ``repro.engine`` depends on
+``repro.core.failures`` while ``repro.core.retry``/``policy`` depend on
+``repro.engine`` — laziness breaks the package-init cycle.
+"""
+from __future__ import annotations
+
+_EXPORTS = {
+    # failures
+    "Layer": "repro.core.failures",
+    "Retriable": "repro.core.failures",
+    "DetectionStrategy": "repro.core.failures",
+    "FailureReport": "repro.core.failures",
+    "WrathFailure": "repro.core.failures",
+    "MonitorLossError": "repro.core.failures",
+    "ManagerLossError": "repro.core.failures",
+    "WorkerLostError": "repro.core.failures",
+    "DependencyError": "repro.core.failures",
+    "ResourceStarvationError": "repro.core.failures",
+    "UlimitExceededError": "repro.core.failures",
+    "PilotJobInitError": "repro.core.failures",
+    "HardwareShutdownError": "repro.core.failures",
+    "EnvironmentMismatchError": "repro.core.failures",
+    "HeartbeatLostError": "repro.core.failures",
+    "RandomSeedError": "repro.core.failures",
+    "NumericalDivergenceError": "repro.core.failures",
+    # taxonomy
+    "DEFAULT_FTL": "repro.core.taxonomy",
+    "FailureTaxonomyLibrary": "repro.core.taxonomy",
+    "TaxonomyEntry": "repro.core.taxonomy",
+    "TABLE_I": "repro.core.taxonomy",
+    # monitoring
+    "MonitoringDatabase": "repro.core.monitoring",
+    "Radio": "repro.core.monitoring",
+    "InProcRadio": "repro.core.monitoring",
+    "TCPRadio": "repro.core.monitoring",
+    "TCPRadioServer": "repro.core.monitoring",
+    "SystemMonitoringAgent": "repro.core.monitoring",
+    "TaskMonitoringAgent": "repro.core.monitoring",
+    # categorization / retry / policy
+    "Categorization": "repro.core.categorization",
+    "FailureCategorizationEngine": "repro.core.categorization",
+    "HierarchicalRetryPlanner": "repro.core.retry",
+    "Placement": "repro.core.retry",
+    "ResiliencePolicyEngine": "repro.core.policy",
+    "wrath_retry_handler": "repro.core.policy",
+}
+
+__all__ = sorted(_EXPORTS)
+
+
+def __getattr__(name: str):
+    import importlib
+
+    mod = _EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(f"module 'repro.core' has no attribute {name!r}")
+    return getattr(importlib.import_module(mod), name)
+
+
+def __dir__():
+    return __all__

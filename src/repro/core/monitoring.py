@@ -1,0 +1,338 @@
+"""Hierarchical monitoring system (paper §IV).
+
+Components:
+
+* :class:`MonitoringDatabase` — the centralized monitoring database that
+  consolidates task events, failure reports, heartbeats, resource profiles
+  and placement history, and answers the queries the resilience module
+  needs (e.g. "where has this task historically succeeded?").
+* :class:`Radio` — the communication radio.  :class:`InProcRadio` delivers
+  messages in-process; :class:`TCPRadio`/:class:`TCPRadioServer` implement
+  the paper's TCP transport (JSON lines over a socket) and are exercised by
+  tests on localhost.  Both present the same ``send`` interface, so agents
+  are transport-agnostic, mirroring the paper's modular database backends
+  (local DB / cloud DB / Octopus event fabric).
+* :class:`TaskMonitoringAgent` — per-node agent sampling resource usage of
+  the running workers (psutil-based, as §VI-B) plus simulated node state.
+* :class:`SystemMonitoringAgent` — heartbeat emitter for any component.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import socketserver
+import threading
+import time
+from collections import defaultdict
+from dataclasses import asdict, dataclass, is_dataclass
+from typing import Any
+
+try:
+    import psutil  # noqa: F401
+    _HAS_PSUTIL = True
+except Exception:  # pragma: no cover
+    _HAS_PSUTIL = False
+
+from repro.core.failures import FailureReport
+
+
+# --------------------------------------------------------------------------
+# Radio transports
+# --------------------------------------------------------------------------
+
+
+class Radio:
+    def send(self, message: dict[str, Any]) -> None:  # pragma: no cover
+        raise NotImplementedError
+
+
+class InProcRadio(Radio):
+    """Direct-dispatch radio (default for the simulated cluster)."""
+
+    def __init__(self, db: "MonitoringDatabase"):
+        self.db = db
+
+    def send(self, message: dict[str, Any]) -> None:
+        self.db.ingest(message)
+
+
+class TCPRadioServer:
+    """JSON-lines-over-TCP sink feeding a MonitoringDatabase (paper §VI-B)."""
+
+    def __init__(self, db: "MonitoringDatabase", host: str = "127.0.0.1", port: int = 0):
+        self.db = db
+        outer = self
+
+        class Handler(socketserver.StreamRequestHandler):
+            def handle(self) -> None:
+                for line in self.rfile:
+                    line = line.strip()
+                    if not line:
+                        continue
+                    try:
+                        outer.db.ingest(json.loads(line.decode()))
+                    except Exception:  # noqa: BLE001 - malformed msg dropped
+                        pass
+
+        self._server = socketserver.ThreadingTCPServer((host, port), Handler)
+        self._server.daemon_threads = True
+        self.address = self._server.server_address
+        self._thread = threading.Thread(target=self._server.serve_forever,
+                                        daemon=True, name="radio-server")
+
+    def start(self) -> "TCPRadioServer":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        self._server.shutdown()
+        self._server.server_close()
+
+
+class TCPRadio(Radio):
+    def __init__(self, address: tuple[str, int]):
+        self.address = address
+        self._sock: socket.socket | None = None
+        self._lock = threading.Lock()
+
+    def _connect(self) -> socket.socket:
+        if self._sock is None:
+            self._sock = socket.create_connection(self.address, timeout=2.0)
+        return self._sock
+
+    def send(self, message: dict[str, Any]) -> None:
+        data = (json.dumps(message) + "\n").encode()
+        with self._lock:
+            try:
+                self._connect().sendall(data)
+            except OSError:
+                self._sock = None
+                self._connect().sendall(data)
+
+    def close(self) -> None:
+        with self._lock:
+            if self._sock is not None:
+                self._sock.close()
+                self._sock = None
+
+
+# --------------------------------------------------------------------------
+# Centralized monitoring database
+# --------------------------------------------------------------------------
+
+
+@dataclass
+class PlacementStats:
+    successes: int = 0
+    failures: int = 0
+
+    @property
+    def total(self) -> int:
+        return self.successes + self.failures
+
+    @property
+    def success_rate(self) -> float:
+        return self.successes / self.total if self.total else 0.0
+
+
+class MonitoringDatabase:
+    """Thread-safe centralized store + query API (paper §IV)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+        self.task_events: dict[str, list[dict[str, Any]]] = defaultdict(list)
+        self.system_events: list[dict[str, Any]] = []
+        self.failures: list[FailureReport] = []
+        self._heartbeats: dict[str, float] = {}
+        self.resource_profiles: dict[str, list[dict[str, float]]] = defaultdict(list)
+        # placement history keyed by task *name* (template), then node/pool
+        self._node_history: dict[str, dict[str, PlacementStats]] = defaultdict(
+            lambda: defaultdict(PlacementStats))
+        self._pool_history: dict[str, dict[str, PlacementStats]] = defaultdict(
+            lambda: defaultdict(PlacementStats))
+
+    # -- ingest (radio entry point) ----------------------------------------
+    def ingest(self, message: dict[str, Any]) -> None:
+        kind = message.get("kind")
+        if kind == "heartbeat":
+            self.heartbeat(message["node"], message.get("time", time.time()))
+        elif kind == "task_event":
+            self.record_task_event(message["task_id"], message["event"],
+                                   **message.get("data", {}))
+        elif kind == "resource_profile":
+            self.record_resource_profile(message["node"], message.get("profile", {}))
+        elif kind == "system_event":
+            self.record_system_event(message["event"], **message.get("data", {}))
+        elif kind == "placement":
+            self.record_task_placement(message["task_name"], message["node"],
+                                       message["pool"], ok=message["ok"])
+        elif kind == "failure":
+            d = message.get("report", {})
+            self.failures.append(FailureReport(
+                task_id=d.get("task_id"), exception=None,
+                exception_type=d.get("exception_type", ""),
+                message=d.get("message", ""), node=d.get("node"),
+                pool=d.get("pool")))
+
+    # -- writers -----------------------------------------------------------
+    def heartbeat(self, node: str, ts: float) -> None:
+        with self._lock:
+            self._heartbeats[node] = ts
+
+    def record_task_event(self, task_id: str, event: str, **data: Any) -> None:
+        with self._lock:
+            self.task_events[task_id].append(
+                {"event": event, "time": time.time(), **data})
+
+    def record_system_event(self, event: str, **data: Any) -> None:
+        with self._lock:
+            self.system_events.append({"event": event, "time": time.time(), **data})
+
+    def record_resource_profile(self, node: str, profile: dict[str, float]) -> None:
+        with self._lock:
+            self.resource_profiles[node].append({"time": time.time(), **profile})
+            # bound memory: keep last 512 samples per node
+            if len(self.resource_profiles[node]) > 512:
+                del self.resource_profiles[node][:-512]
+
+    def record_task_placement(self, task_name: str, node: str, pool: str | None,
+                              *, ok: bool) -> None:
+        with self._lock:
+            ns = self._node_history[task_name][node]
+            ps = self._pool_history[task_name][pool or "?"]
+            if ok:
+                ns.successes += 1
+                ps.successes += 1
+            else:
+                ns.failures += 1
+                ps.failures += 1
+
+    def report_failure(self, report: FailureReport) -> None:
+        with self._lock:
+            self.failures.append(report)
+
+    # -- queries -------------------------------------------------------------
+    def last_heartbeats(self) -> dict[str, float]:
+        with self._lock:
+            return dict(self._heartbeats)
+
+    def node_history(self, task_name: str) -> dict[str, PlacementStats]:
+        with self._lock:
+            return {k: PlacementStats(v.successes, v.failures)
+                    for k, v in self._node_history[task_name].items()}
+
+    def pool_history(self, task_name: str) -> dict[str, PlacementStats]:
+        with self._lock:
+            return {k: PlacementStats(v.successes, v.failures)
+                    for k, v in self._pool_history[task_name].items()}
+
+    def best_historical_node(self, task_name: str,
+                             exclude: set[str] = frozenset()) -> str | None:
+        """Retry rung 3: where has this task succeeded most often?"""
+        hist = self.node_history(task_name)
+        best, best_score = None, 0
+        for node, stats in hist.items():
+            if node in exclude:
+                continue
+            if stats.successes > best_score:
+                best, best_score = node, stats.successes
+        return best
+
+    def latest_profile(self, node: str) -> dict[str, float] | None:
+        with self._lock:
+            rows = self.resource_profiles.get(node)
+            return dict(rows[-1]) if rows else None
+
+    def failures_for(self, task_id: str) -> list[FailureReport]:
+        with self._lock:
+            return [f for f in self.failures if f.task_id == task_id]
+
+    def events_for(self, task_id: str) -> list[dict[str, Any]]:
+        with self._lock:
+            return list(self.task_events[task_id])
+
+
+# --------------------------------------------------------------------------
+# Agents
+# --------------------------------------------------------------------------
+
+
+class SystemMonitoringAgent:
+    """Heartbeat emitter for an arbitrary component (paper §IV)."""
+
+    def __init__(self, component: str, radio: Radio, period: float = 0.05):
+        self.component = component
+        self.radio = radio
+        self.period = period
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"sysmon-{component}")
+
+    def start(self) -> "SystemMonitoringAgent":
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.radio.send({"kind": "heartbeat", "node": self.component,
+                             "time": time.time()})
+            time.sleep(self.period)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+class TaskMonitoringAgent:
+    """Per-node resource-profile sampler (psutil-based, paper §VI-B).
+
+    Samples the hosting process's CPU/RSS via psutil (real measurements)
+    and merges simulated node state (capacity, simulated in-use memory),
+    shipping profiles over the radio.
+    """
+
+    def __init__(self, node: Any, radio: Radio, period: float = 0.1):
+        self.node = node
+        self.radio = radio
+        self.period = period
+        self._stop = threading.Event()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name=f"taskmon-{node.name}")
+        self._proc = psutil.Process() if _HAS_PSUTIL else None
+
+    def sample(self) -> dict[str, float]:
+        prof: dict[str, float] = {
+            "sim_mem_in_use_gb": float(self.node.mem_in_use_gb),
+            "sim_mem_capacity_gb": float(self.node.memory_gb),
+            "sim_healthy": float(self.node.healthy),
+            "sim_queue_depth": float(self.node.task_queue.qsize()),
+            "sim_alive_workers": float(sum(1 for w in self.node.workers if w.alive)),
+        }
+        if self._proc is not None:
+            try:
+                prof["proc_rss_gb"] = self._proc.memory_info().rss / 2**30
+                prof["proc_cpu_pct"] = self._proc.cpu_percent(interval=None)
+                prof["proc_open_files"] = float(len(self._proc.open_files()))
+            except Exception:  # noqa: BLE001
+                pass
+        return prof
+
+    def start(self) -> "TaskMonitoringAgent":
+        self._thread.start()
+        return self
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            self.radio.send({"kind": "resource_profile", "node": self.node.name,
+                             "profile": self.sample()})
+            time.sleep(self.period)
+
+    def stop(self) -> None:
+        self._stop.set()
+
+
+def serialize_report(report: FailureReport) -> dict[str, Any]:
+    """JSON-safe rendering of a FailureReport for radio shipping."""
+    d = {k: v for k, v in asdict(report).items() if k != "exception"}
+    if is_dataclass(d.get("requirements")):
+        d["requirements"] = asdict(d["requirements"])
+    return d

@@ -1,0 +1,127 @@
+"""Resilience Policy Engine (paper §V-B, Fig 2) — WRATH's retry handler.
+
+Maps categorized failures to actions:
+
+* **resource denylist** — components that stopped communicating (or whose
+  hardware failed) are denylisted; HTCondor-style, they are removed from
+  the list if they later resume heartbeating;
+* **immediate termination** — non-recoverable failures terminate the task
+  (and thus the application) at once to avoid wasted compute ("fail fast");
+* **hierarchical retry** — recoverable failures are replanned by the
+  four-rung :class:`~repro.core.retry.HierarchicalRetryPlanner`;
+* **restart of failed components** — system failures restart the failed
+  worker/manager before the retry (Fig 2, left branch).
+
+The engine is installed into the DFK as ``retry_handler=`` (paper §VI-B:
+"We implement the resilience module as a retry handler in Parsl").
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core.categorization import Categorization, FailureCategorizationEngine
+from repro.core.failures import FailureReport
+from repro.core.retry import HierarchicalRetryPlanner
+from repro.core.taxonomy import DEFAULT_FTL, FailureTaxonomyLibrary
+from repro.engine.retry_api import Action, RetryDecision, SchedulingContext
+
+
+class ResiliencePolicyEngine:
+    def __init__(
+        self,
+        ftl: FailureTaxonomyLibrary | None = None,
+        *,
+        fail_fast_distinct_nodes: int = 2,
+        heartbeat_resume_window: float = 0.5,
+    ):
+        self.ftl = ftl or DEFAULT_FTL
+        self.fail_fast_distinct_nodes = fail_fast_distinct_nodes
+        self.heartbeat_resume_window = heartbeat_resume_window
+        self.decisions: list[dict] = []   # audit log for tests/benchmarks
+
+    # ------------------------------------------------------------------ #
+    def __call__(self, record, report: FailureReport,
+                 ctx: SchedulingContext) -> RetryDecision:
+        engine = FailureCategorizationEngine(
+            self.ftl, ctx.monitor,
+            fail_fast_distinct_nodes=self.fail_fast_distinct_nodes)
+        planner = HierarchicalRetryPlanner(ctx.cluster, ctx.monitor)
+
+        self._refresh_denylist(ctx)
+        cat = engine.categorize(record, report)
+        decision = self._decide(record, report, cat, ctx, planner)
+        self.decisions.append({
+            "task_id": record.task_id,
+            "failure_type": cat.entry.failure_type,
+            "layer": cat.entry.layer.value,
+            "resolvable": cat.resolvable,
+            "action": decision.action.value,
+            "rung": decision.rung,
+            "reason": decision.reason,
+        })
+        return decision
+
+    # ------------------------------------------------------------------ #
+    def _decide(self, record, report: FailureReport, cat: Categorization,
+                ctx: SchedulingContext,
+                planner: HierarchicalRetryPlanner) -> RetryDecision:
+        # Fig 2 step 1: non-recoverable -> immediate termination (fail fast).
+        if not cat.resolvable:
+            return RetryDecision(Action.FAIL,
+                                 reason=f"immediate termination: {cat.explanation}")
+
+        # Denylist malfunctioning components before planning placement.
+        if cat.denylist_node and report.node:
+            ctx.denylist.add(report.node)
+            if ctx.monitor is not None:
+                ctx.monitor.record_system_event("denylist_add", node=report.node,
+                                                cause=cat.entry.failure_type)
+
+        if record.retry_count >= record.max_retries:
+            return RetryDecision(Action.FAIL, reason="retries exhausted")
+
+        placement = planner.plan(record, report, cat, ctx.denylist)
+        if placement is None:
+            return RetryDecision(
+                Action.FAIL,
+                reason=f"no feasible placement anywhere: {cat.explanation}")
+
+        overrides = dict(cat.suggested_overrides)
+        action = Action.RETRY
+        restart = None
+        if cat.restart_component:
+            # Fig 2: system failures -> restart failed component, then retry
+            action = Action.RESTART_AND_RETRY
+            restart = cat.restart_component
+
+        delay = cat.retry_delay_s * (2 ** record.retry_count) if cat.retry_delay_s else 0.0
+        return RetryDecision(
+            action,
+            target_pool=placement.pool,
+            target_node=placement.node,
+            resource_overrides=overrides,
+            restart_component=restart,
+            reason=f"{cat.explanation} | {placement.reason}",
+            rung=placement.rung,
+            delay_s=delay,
+        )
+
+    # ------------------------------------------------------------------ #
+    def _refresh_denylist(self, ctx: SchedulingContext) -> None:
+        """HTCondor-style: resources resuming communication leave the list."""
+        if ctx.monitor is None:
+            return
+        now = time.time()
+        beats = ctx.monitor.last_heartbeats()
+        for node in list(ctx.denylist):
+            last = beats.get(node)
+            if last is not None and now - last < self.heartbeat_resume_window:
+                node_obj = ctx.cluster.find_node(node)
+                if node_obj is not None and node_obj.healthy:
+                    ctx.denylist.discard(node)
+                    ctx.monitor.record_system_event("denylist_remove", node=node)
+
+
+def wrath_retry_handler(**kwargs) -> ResiliencePolicyEngine:
+    """Convenience factory: ``DataFlowKernel(retry_handler=wrath_retry_handler())``."""
+    return ResiliencePolicyEngine(**kwargs)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import SyntheticTokens, batch_for
+
+__all__ = ["SyntheticTokens", "batch_for"]

@@ -1,0 +1,22 @@
+from repro.distributed.sharding import (
+    ACT_RULES,
+    CACHE_RULES,
+    PARAM_RULES,
+    ShardingRules,
+    activation_sharding,
+    defs_pspecs,
+    defs_shardings,
+    spec_for,
+)
+from repro.distributed.step import (
+    StepConfig,
+    build_prefill_step,
+    build_serve_step,
+    build_train_step,
+)
+
+__all__ = [
+    "ShardingRules", "PARAM_RULES", "ACT_RULES", "CACHE_RULES",
+    "spec_for", "defs_pspecs", "defs_shardings", "activation_sharding",
+    "StepConfig", "build_train_step", "build_serve_step", "build_prefill_step",
+]

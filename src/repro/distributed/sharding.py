@@ -1,0 +1,161 @@
+"""Sharding-rule engine: logical axes → mesh axes with divisibility fallback.
+
+Models annotate parameters (via ParamDef.axes) and activations (via
+``constrain``) with *logical* axis names.  A :class:`ShardingRules` table
+maps each logical name to an ordered preference of mesh-axis tuples; the
+engine picks, per tensor, the first candidate whose mesh-axis product
+divides the dimension and whose axes are not already claimed by another
+dimension of the same tensor.  This is what makes one rule table work
+across all 10 architectures and every degraded (elastic) mesh.
+
+Default layout (v5e-style 2-D/3-D mesh, axes ``pod``/``data``/``model``):
+
+* parameters — FSDP over (pod, data) on the ``d_model`` dim and tensor
+  parallelism over ``model`` on heads / d_ff / experts / vocab;
+* activations — batch over (pod, data), heads/d_ff/experts/vocab over
+  ``model``;
+* decode caches — batch over (pod, data) with ``seq`` over ``model`` so
+  single-sequence long-context decode still spreads across chips.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.spec import ParamDef, is_def
+
+Candidate = tuple[str, ...]          # one mesh-axis combination
+Preference = tuple[Candidate, ...]   # ordered fallbacks
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """logical axis -> ordered candidates (first feasible wins)."""
+
+    rules: dict[str, Preference]
+
+    def lookup(self, name: str | None) -> Preference:
+        if name is None:
+            return ()
+        return self.rules.get(name, ())
+
+    def replace(self, **upd: Preference) -> "ShardingRules":
+        d = dict(self.rules)
+        d.update(upd)
+        return ShardingRules(d)
+
+
+def _mk(*cands: tuple[str, ...]) -> Preference:
+    return tuple(cands)
+
+
+# fsdp = (pod, data) when multi-pod; the engine prunes absent axes.
+PARAM_RULES = ShardingRules({
+    "d_model": _mk(("pod", "data"), ("data",)),
+    "d_ff": _mk(("model",)),
+    "heads": _mk(("model",)),
+    "kv_heads": _mk(("model",)),
+    "experts": _mk(("model",)),
+    "vocab": _mk(("model",)),
+    "layers": (),                    # never shard the scan axis
+})
+
+ACT_RULES = ShardingRules({
+    "batch": _mk(("pod", "data"), ("data",)),
+    "seq": (),
+    # residual stream between blocks ("seq_res"): Megatron-SP-style
+    # sequence sharding over the TP axis was MEASURED AND REFUTED for this
+    # stack (EXPERIMENTS.md §Perf, deepseek-v3 iteration 3): the shard_map
+    # MoE needs model-replicated tokens at entry, so SP inserted gather/
+    # reshard pairs that grew collective time 93s→149s.  Left unsharded.
+    "seq_res": (),
+    "d_model": (),
+    "d_ff": _mk(("model",)),
+    "heads": _mk(("model",)),
+    "kv_heads": _mk(("model",)),
+    "experts": _mk(("model",)),
+    "vocab": _mk(("model",)),
+})
+
+CACHE_RULES = ShardingRules({
+    "batch": _mk(("pod", "data"), ("data",)),
+    "seq": _mk(("model",)),          # long-context: spread the KV/latent cache
+    "kv_heads": (),                  # seq sharding beats head sharding for caches
+    "heads": _mk(("model",)),        # ssd/rglru state heads
+    "d_ff": _mk(("model",)),
+    "d_model": (),
+})
+
+
+def spec_for(shape: tuple[int, ...], axes: tuple[str | None, ...],
+             rules: ShardingRules, mesh: Mesh) -> P:
+    """Pick a PartitionSpec: first feasible candidate per dim, no axis reuse."""
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set[str] = set()
+    parts: list[Any] = []
+    for dim, name in zip(shape, axes):
+        chosen: Candidate | None = None
+        for cand in rules.lookup(name):
+            cand = tuple(a for a in cand if a in mesh_sizes)
+            if not cand or any(a in used for a in cand):
+                continue
+            prod = int(np.prod([mesh_sizes[a] for a in cand]))
+            if prod > 1 and dim % prod == 0:
+                chosen = cand
+                break
+        if chosen:
+            used.update(chosen)
+            parts.append(chosen if len(chosen) > 1 else chosen[0])
+        else:
+            parts.append(None)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def defs_pspecs(defs: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    """ParamDef tree -> PartitionSpec tree."""
+    return jax.tree.map(
+        lambda d: spec_for(d.shape, d.axes, rules, mesh), defs, is_leaf=is_def)
+
+
+def defs_shardings(defs: Any, rules: ShardingRules, mesh: Mesh) -> Any:
+    return jax.tree.map(
+        lambda d: NamedSharding(mesh, spec_for(d.shape, d.axes, rules, mesh)),
+        defs, is_leaf=is_def)
+
+
+def make_constrain_fn(mesh: Mesh, rules: ShardingRules):
+    """The activation-sharding hook installed via models.layers.set_shard_fn."""
+
+    def constrain(x: jax.Array, axes: tuple[str | None, ...]) -> jax.Array:
+        if len(axes) != x.ndim:
+            return x
+        spec = spec_for(x.shape, axes, rules, mesh)
+        return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+    return constrain
+
+
+class activation_sharding:
+    """Context manager installing the activation-constraint hook."""
+
+    def __init__(self, mesh: Mesh, rules: ShardingRules = ACT_RULES):
+        self.mesh = mesh
+        self.rules = rules
+
+    def __enter__(self):
+        from repro.models.layers import set_shard_fn
+
+        self._token = set_shard_fn(make_constrain_fn(self.mesh, self.rules),
+                                   mesh=self.mesh)
+        return self
+
+    def __exit__(self, *exc):
+        from repro.models.layers import reset_shard_fn
+
+        reset_shard_fn(self._token)

@@ -1,0 +1,97 @@
+"""pjit step builders: train_step / prefill_step / serve_step.
+
+``build_train_step`` composes: microbatch gradient accumulation
+(``lax.scan``, cutting activation memory by the microbatch factor) →
+global-norm clip → AdamW.  Params and optimizer state are donated.
+
+All functions are *pure builders*: they return functions suitable for
+``jax.jit(..., in_shardings=..., donate_argnums=...)``; shardings are
+derived from the ParamDef trees by the rule engine and attached by the
+caller (see ``repro.launch.dryrun`` / ``repro.launch.train``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import decode_step as model_decode_step
+from repro.models import loss_fn as model_loss_fn
+from repro.models.config import ModelConfig
+from repro.models.model import prefill_forward
+from repro.optim import OptConfig, adamw_apply
+
+
+@dataclasses.dataclass(frozen=True)
+class StepConfig:
+    microbatches: int = 1
+    remat: bool = True
+    accum_dtype: str = "float32"     # "bfloat16" halves grad-accum memory
+    ce_chunk: int = 512
+
+    @property
+    def adtype(self):
+        return jnp.dtype(self.accum_dtype)
+
+
+def build_train_step(cfg: ModelConfig, opt_cfg: OptConfig,
+                     step_cfg: StepConfig = StepConfig()) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def loss_f(p: Any, b: dict):
+        return model_loss_fn(p, b, cfg, remat=step_cfg.remat,
+                             ce_chunk=step_cfg.ce_chunk)
+
+    grad_f = jax.value_and_grad(loss_f, has_aux=True)
+
+    def train_step(params: Any, opt_state: dict, batch: dict):
+        k = step_cfg.microbatches
+        if k > 1:
+            def resh(x):
+                return x.reshape((k, x.shape[0] // k) + x.shape[1:])
+
+            mb = jax.tree.map(resh, batch)
+
+            def body(carry, b):
+                gsum, lsum = carry
+                (l, _), g = grad_f(params, b)
+                gsum = jax.tree.map(
+                    lambda a, gg: a + gg.astype(step_cfg.adtype), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, step_cfg.adtype), params)
+            (gsum, lsum), _ = jax.lax.scan(
+                body, (g0, jnp.zeros((), jnp.float32)), mb)
+            grads = jax.tree.map(lambda g: (g / k).astype(jnp.float32), gsum)
+            loss = lsum / k
+            metrics: dict[str, Any] = {}
+        else:
+            (loss, metrics), grads = grad_f(params, batch)
+        new_params, new_state, om = adamw_apply(params, grads, opt_state, opt_cfg)
+        out_metrics = {"loss": loss, **{k2: v for k2, v in (metrics or {}).items()},
+                       **om}
+        return new_params, new_state, out_metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, step_cfg: StepConfig = StepConfig()
+                       ) -> Callable:
+    """(params, batch) -> (last-token logits, decode cache)."""
+
+    def prefill_step(params: Any, batch: dict):
+        return prefill_forward(params, batch, cfg, remat=step_cfg.remat)
+
+    return prefill_step
+
+
+def build_serve_step(cfg: ModelConfig) -> Callable:
+    """(params, cache, batch) -> (logits, cache) — one decoded token."""
+
+    def serve_step(params: Any, cache: dict, batch: dict):
+        return model_decode_step(params, cache, batch, cfg)
+
+    return serve_step

@@ -1,0 +1,26 @@
+"""TBPP substrate: tasks, DAG, simulated cluster, executors, DataFlowKernel.
+
+This is the Parsl-analog layer of the reproduction (paper §VI-A): a real,
+runnable task-based parallel programming engine with futures and DAG
+dependency resolution, executing on a simulated heterogeneous cluster.
+WRATH (``repro.core``) plugs into the DataFlowKernel as the retry handler.
+"""
+from repro.engine.task import task, TaskDef, TaskRecord, AppFuture, TaskState, ResourceSpec
+from repro.engine.cluster import Cluster, ResourcePool, Node, Worker
+from repro.engine.executor import Executor
+from repro.engine.dfk import DataFlowKernel
+
+__all__ = [
+    "task",
+    "TaskDef",
+    "TaskRecord",
+    "AppFuture",
+    "TaskState",
+    "ResourceSpec",
+    "Cluster",
+    "ResourcePool",
+    "Node",
+    "Worker",
+    "Executor",
+    "DataFlowKernel",
+]

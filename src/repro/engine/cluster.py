@@ -1,0 +1,332 @@
+"""Simulated heterogeneous cluster (Runtime + Environment layers).
+
+A :class:`Cluster` is a set of :class:`ResourcePool`\\ s (Parsl executors map
+1:1 onto pools); each pool holds :class:`Node`\\ s with *distinct* memory
+capacities, package environments, ulimits, health and speed — the
+heterogeneity that WRATH's hierarchical retry exploits (paper §VII-C).
+
+Execution follows the pilot-job model (paper §II-A): starting a pool runs a
+*node manager* per node which spawns worker threads; workers pull tasks
+from the node queue and push results back.  Node managers heartbeat to the
+monitoring system; a hardware shutdown silences the heartbeat and kills the
+node's in-flight tasks, exactly the manifestation chain of §III-B.
+
+Resource enforcement: before running a task the worker checks the task's
+:class:`~repro.engine.task.ResourceSpec` against the node — missing
+packages raise :class:`EnvironmentMismatchError` (the ImportError
+manifestation), insufficient memory raises :class:`MemoryError` (the OOM
+manifestation), exceeded ulimits raise :class:`UlimitExceededError`.  This
+is how the paper's "200 GB task on a 192 GB node" scenario arises naturally
+rather than being scripted.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+import traceback
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from repro.core.failures import (
+    EnvironmentMismatchError,
+    HardwareShutdownError,
+    PilotJobInitError,
+    UlimitExceededError,
+    WorkerLostError,
+)
+from repro.engine.task import TaskRecord
+
+# thread-local handle letting task code discover which node it runs on
+# (used by ``simwork`` for speed-scaled sleeps, and by tests)
+_current = threading.local()
+
+
+def current_node() -> "Node | None":
+    return getattr(_current, "node", None)
+
+
+def current_worker() -> "Worker | None":
+    return getattr(_current, "worker", None)
+
+
+def simwork(seconds: float) -> None:
+    """Sleep ``seconds`` of *nominal* work, scaled by the node's speed.
+
+    A straggler node (speed < 1) takes proportionally longer — the hook used
+    by straggler-mitigation tests and benchmarks.
+    """
+    node = current_node()
+    speed = node.speed if node is not None else 1.0
+    time.sleep(seconds / max(speed, 1e-6))
+
+
+class _WorkerKilled(BaseException):
+    """Internal control-flow signal: the injected failure killed the worker."""
+
+
+def kill_current_worker(msg: str = "worker killed by injected failure") -> None:
+    """Called from *inside* a task to simulate the worker process dying
+    (Table III 'Worker-killed').  Raises a BaseException subclass so user
+    ``except Exception`` blocks cannot swallow it, mirroring a SIGKILL."""
+    raise _WorkerKilled(msg)
+
+
+@dataclass
+class Node:
+    """One compute node (Environment layer)."""
+
+    name: str
+    memory_gb: float = 192.0
+    packages: frozenset[str] = frozenset({"numpy", "jax"})
+    ulimit_files: int = 1024
+    speed: float = 1.0           # relative execution speed (stragglers < 1)
+    workers_per_node: int = 2
+    healthy: bool = True
+
+    # runtime state ------------------------------------------------------
+    pool: "ResourcePool | None" = field(default=None, repr=False)
+    task_queue: "queue.Queue[TaskRecord | None]" = field(
+        default_factory=queue.Queue, repr=False)
+    workers: list["Worker"] = field(default_factory=list, repr=False)
+    manager: "NodeManager | None" = field(default=None, repr=False)
+    mem_in_use_gb: float = 0.0
+    _mem_lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def satisfies(self, spec) -> tuple[bool, str]:
+        """Static check: could this node *ever* run a task with ``spec``?"""
+        missing = set(spec.packages) - set(self.packages)
+        if missing:
+            return False, f"missing packages {sorted(missing)}"
+        if spec.memory_gb > self.memory_gb:
+            return False, f"needs {spec.memory_gb}GB > capacity {self.memory_gb}GB"
+        if spec.open_files > self.ulimit_files:
+            return False, f"needs {spec.open_files} fds > ulimit {self.ulimit_files}"
+        return True, ""
+
+    def shutdown_hardware(self) -> None:
+        """Simulate a hardware shutdown (Environment-layer failure)."""
+        self.healthy = False
+
+    def restore_hardware(self) -> None:
+        self.healthy = True
+
+
+@dataclass
+class ResourcePool:
+    """A pool of nodes = one Parsl executor's resources."""
+
+    name: str
+    nodes: list[Node] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        for n in self.nodes:
+            n.pool = self
+
+    def healthy_nodes(self) -> list[Node]:
+        return [n for n in self.nodes if n.healthy]
+
+    def add_node(self, node: Node) -> None:
+        node.pool = self
+        self.nodes.append(node)
+
+
+class Worker:
+    """A worker process analog: one thread pulling tasks off the node queue."""
+
+    _ids = 0
+
+    def __init__(self, node: Node, on_result: Callable[[TaskRecord, Any, BaseException | None, "Worker"], None]):
+        Worker._ids += 1
+        self.worker_id = f"{node.name}/w{Worker._ids:04d}"
+        self.node = node
+        self.on_result = on_result
+        self.alive = True
+        self._thread = threading.Thread(target=self._loop, name=self.worker_id, daemon=True)
+
+    def start(self) -> None:
+        self._thread.start()
+
+    def _loop(self) -> None:
+        _current.node = self.node
+        _current.worker = self
+        while self.alive:
+            try:
+                rec = self.node.task_queue.get(timeout=0.1)
+            except queue.Empty:
+                if not self.node.healthy:
+                    self.alive = False
+                continue
+            if rec is None:  # poison pill
+                self.alive = False
+                break
+            self._run_one(rec)
+
+    # -- execution with environment enforcement -------------------------
+    def _run_one(self, rec: TaskRecord) -> None:
+        node = self.node
+        spec = rec.effective_resources()
+        rec.start_time = time.time()
+        err: BaseException | None = None
+        result: Any = None
+        try:
+            if not node.healthy:
+                raise HardwareShutdownError(
+                    f"node {node.name} hardware is down", node=node.name)
+            missing = set(spec.packages) - set(node.packages)
+            if missing:
+                raise EnvironmentMismatchError(
+                    f"No module named {sorted(missing)[0]!r} on {node.name}",
+                    missing_packages=tuple(sorted(missing)),
+                    node=node.name,
+                )
+            if spec.open_files > node.ulimit_files:
+                raise UlimitExceededError(
+                    f"OSError: [Errno 24] Too many open files "
+                    f"(need {spec.open_files}, ulimit {node.ulimit_files})",
+                    node=node.name,
+                )
+            with node._mem_lock:
+                if node.mem_in_use_gb + spec.memory_gb > node.memory_gb:
+                    # the OS would OOM-kill: manifest as MemoryError
+                    raise MemoryError(
+                        f"cannot allocate {spec.memory_gb}GB on {node.name} "
+                        f"({node.mem_in_use_gb}GB in use of {node.memory_gb}GB)")
+                node.mem_in_use_gb += spec.memory_gb
+            try:
+                result = rec.fn(*rec.args, **rec.kwargs)
+            finally:
+                with node._mem_lock:
+                    node.mem_in_use_gb -= spec.memory_gb
+        except _WorkerKilled as wk:
+            # the "process" died: this worker stops pulling tasks
+            self.alive = False
+            err = WorkerLostError(str(wk), node=node.name, worker=self.worker_id)
+        except BaseException as e:  # noqa: BLE001 - we must capture everything
+            err = e
+            err._wrath_traceback = traceback.format_exc()  # type: ignore[attr-defined]
+        rec.end_time = time.time()
+        self.on_result(rec, result, err, self)
+
+
+class NodeManager:
+    """Pilot-job node manager: spawns workers and heartbeats (paper §VI-A)."""
+
+    def __init__(self, node: Node, on_result, heartbeat: Callable[[str, float], None] | None,
+                 heartbeat_period: float = 0.05):
+        self.node = node
+        self.on_result = on_result
+        self.heartbeat = heartbeat
+        self.heartbeat_period = heartbeat_period
+        self._stop = threading.Event()
+        self._hb_thread = threading.Thread(
+            target=self._hb_loop, name=f"hb-{node.name}", daemon=True)
+
+    def start(self) -> None:
+        if not self.node.healthy:
+            raise PilotJobInitError(
+                f"pilot job failed to initialize on {self.node.name}",
+                node=self.node.name)
+        for _ in range(self.node.workers_per_node):
+            self.spawn_worker()
+        self._hb_thread.start()
+
+    def spawn_worker(self) -> Worker:
+        w = Worker(self.node, self.on_result)
+        self.node.workers.append(w)
+        w.start()
+        return w
+
+    def alive_workers(self) -> list[Worker]:
+        return [w for w in self.node.workers if w.alive]
+
+    def restart_dead_workers(self) -> int:
+        """WRATH 'restart failed component' action for lost workers."""
+        n = 0
+        self.node.workers = [w for w in self.node.workers if w.alive]
+        while len(self.node.workers) < self.node.workers_per_node:
+            self.spawn_worker()
+            n += 1
+        return n
+
+    def _hb_loop(self) -> None:
+        while not self._stop.is_set():
+            if self.node.healthy:
+                if self.heartbeat is not None:
+                    self.heartbeat(self.node.name, time.time())
+                # pilot-job managers track worker processes and respawn the
+                # dead (tasks queued behind a killed worker must not orphan)
+                self.restart_dead_workers()
+            time.sleep(self.heartbeat_period)
+
+    def stop(self) -> None:
+        self._stop.set()
+        for w in self.node.workers:
+            w.alive = False
+        # poison pills to unblock queue waits
+        for _ in self.node.workers:
+            self.node.task_queue.put(None)
+
+
+class Cluster:
+    """The full simulated machine: pools of heterogeneous nodes."""
+
+    def __init__(self, pools: list[ResourcePool]):
+        self.pools = {p.name: p for p in pools}
+        if len(self.pools) != len(pools):
+            raise ValueError("duplicate pool names")
+
+    def pool(self, name: str) -> ResourcePool:
+        return self.pools[name]
+
+    def all_nodes(self) -> list[Node]:
+        return [n for p in self.pools.values() for n in p.nodes]
+
+    def find_node(self, name: str) -> Node | None:
+        for n in self.all_nodes():
+            if n.name == name:
+                return n
+        return None
+
+    # convenience constructors -----------------------------------------
+    @staticmethod
+    def homogeneous(n_nodes: int = 4, *, pool_name: str = "default",
+                    memory_gb: float = 192.0,
+                    packages: frozenset[str] = frozenset({"numpy", "jax"}),
+                    workers_per_node: int = 2) -> "Cluster":
+        nodes = [Node(name=f"{pool_name}-n{i:03d}", memory_gb=memory_gb,
+                      packages=packages, workers_per_node=workers_per_node)
+                 for i in range(n_nodes)]
+        return Cluster([ResourcePool(pool_name, nodes)])
+
+    @staticmethod
+    def paper_testbed(small_nodes: int = 4, big_nodes: int = 1, *,
+                      with_pkg_pool: bool = False,
+                      package: str = "scipy",
+                      workers_per_node: int = 2) -> "Cluster":
+        """The §VII-C two-executor setup: 192 GB nodes vs 6 TB nodes, and
+        optionally a with-package vs without-package pool pair."""
+        base_pkgs = frozenset({"numpy", "jax"})
+        pools = [
+            ResourcePool("small-mem", [
+                Node(name=f"small-n{i:03d}", memory_gb=192.0, packages=base_pkgs,
+                     workers_per_node=workers_per_node)
+                for i in range(small_nodes)]),
+            ResourcePool("big-mem", [
+                Node(name=f"big-n{i:03d}", memory_gb=6144.0, packages=base_pkgs,
+                     workers_per_node=workers_per_node)
+                for i in range(big_nodes)]),
+        ]
+        if with_pkg_pool:
+            pools = [
+                ResourcePool("no-pkg", [
+                    Node(name=f"nopkg-n{i:03d}", memory_gb=192.0,
+                         packages=base_pkgs, workers_per_node=workers_per_node)
+                    for i in range(small_nodes)]),
+                ResourcePool("with-pkg", [
+                    Node(name=f"pkg-n{i:03d}", memory_gb=192.0,
+                         packages=base_pkgs | {package},
+                         workers_per_node=workers_per_node)
+                    for i in range(big_nodes)]),
+            ]
+        return Cluster(pools)

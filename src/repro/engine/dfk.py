@@ -1,0 +1,460 @@
+"""DataFlowKernel: the central manager of the TBPP framework (paper §VI-A).
+
+Responsibilities mirror Parsl's DFK: dependency resolution (DAG), task
+scheduling onto executors, task status tracking — and the *retry handler*
+hook through which WRATH's resilience module is attached (paper §VI-B).
+
+The DFK also runs the framework-side watchers:
+
+* a **heartbeat watcher** that declares nodes lost when their system
+  monitoring agent goes silent (paper §IV), failing in-flight tasks with
+  :class:`HardwareShutdownError` so they flow through the retry handler;
+* a **straggler watcher** that (optionally) speculatively re-executes tasks
+  running far beyond their expected duration on a different node — the
+  training-plane straggler mitigation, available to the task plane too.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any
+
+from repro.core.failures import (
+    DependencyError,
+    FailureReport,
+    HardwareShutdownError,
+    ResourceStarvationError,
+)
+from repro.engine.cluster import Cluster, Node
+from repro.engine.executor import Executor
+from repro.engine.retry_api import (
+    Action,
+    RetryDecision,
+    SchedulingContext,
+    baseline_retry_handler,
+)
+from repro.engine.task import AppFuture, TaskDef, TaskRecord, TaskState, new_task_record
+
+
+def _iter_futures(obj: Any):
+    if isinstance(obj, AppFuture):
+        yield obj
+    elif isinstance(obj, (list, tuple, set)):
+        for x in obj:
+            yield from _iter_futures(x)
+    elif isinstance(obj, dict):
+        for x in obj.values():
+            yield from _iter_futures(x)
+
+
+def _resolve(obj: Any):
+    """Replace finished AppFutures inside args with their results."""
+    if isinstance(obj, AppFuture):
+        return obj.result(timeout=0)
+    if isinstance(obj, list):
+        return [_resolve(x) for x in obj]
+    if isinstance(obj, tuple):
+        return tuple(_resolve(x) for x in obj)
+    if isinstance(obj, dict):
+        return {k: _resolve(v) for k, v in obj.items()}
+    return obj
+
+
+class DataFlowKernel:
+    _current: "DataFlowKernel | None" = None
+
+    def __init__(
+        self,
+        cluster: Cluster,
+        *,
+        retry_handler=None,
+        monitor=None,
+        default_retries: int = 2,
+        default_pool: str | None = None,
+        heartbeat_period: float = 0.05,
+        heartbeat_threshold: float = 5.0,   # missed periods before node is lost
+        speculative_execution: bool = False,
+        straggler_factor: float = 3.0,
+    ):
+        self.cluster = cluster
+        self.monitor = monitor
+        self.retry_handler = retry_handler or baseline_retry_handler
+        self.default_retries = default_retries
+        self.default_pool = default_pool or next(iter(cluster.pools))
+        self.heartbeat_period = heartbeat_period
+        self.heartbeat_threshold = heartbeat_threshold
+        self.speculative_execution = speculative_execution
+        self.straggler_factor = straggler_factor
+
+        self.tasks: dict[str, TaskRecord] = {}
+        self.executors: dict[str, Executor] = {}
+        self.denylist: set[str] = set()
+        self._assignment: dict[str, tuple[str, str]] = {}  # task -> (pool, node)
+        self._children: dict[str, list[TaskRecord]] = {}
+        self._speculated: set[str] = set()
+        self._done_first: dict[str, bool] = {}
+
+        self._lock = threading.RLock()
+        self._all_done = threading.Condition(self._lock)
+        self._outstanding = 0
+        self._stop = threading.Event()
+
+        self.stats: dict[str, float] = {
+            "submitted": 0, "completed": 0, "failed": 0, "dep_failed": 0,
+            "retries": 0, "retry_success": 0, "wrath_overhead_s": 0.0,
+            "restarts": 0, "speculations": 0, "start_time": 0.0,
+        }
+
+    # ------------------------------------------------------------------ #
+    # lifecycle
+    # ------------------------------------------------------------------ #
+    def __enter__(self) -> "DataFlowKernel":
+        self.start()
+        DataFlowKernel._current = self
+        return self
+
+    def __exit__(self, *exc) -> None:
+        DataFlowKernel._current = None
+        self.shutdown()
+
+    @classmethod
+    def current(cls) -> "DataFlowKernel | None":
+        return cls._current
+
+    def start(self) -> None:
+        self.stats["start_time"] = time.time()
+        hb = self.monitor.heartbeat if self.monitor is not None else None
+        for name, pool in self.cluster.pools.items():
+            ex = Executor(
+                pool, self._on_result, heartbeat=hb,
+                denylisted=lambda node: node in self.denylist,
+                heartbeat_period=self.heartbeat_period)
+            ex.start()
+            self.executors[name] = ex
+        self._watcher = threading.Thread(target=self._watch_loop, daemon=True,
+                                         name="dfk-watcher")
+        self._watcher.start()
+
+    def shutdown(self) -> None:
+        self._stop.set()
+        for ex in self.executors.values():
+            ex.stop()
+
+    def context(self) -> SchedulingContext:
+        return SchedulingContext(
+            cluster=self.cluster, monitor=self.monitor,
+            denylist=self.denylist, default_pool=self.default_pool)
+
+    # ------------------------------------------------------------------ #
+    # submission & dependency resolution
+    # ------------------------------------------------------------------ #
+    def submit(self, td: TaskDef, args: tuple, kwargs: dict) -> AppFuture:
+        rec = new_task_record(td, args, kwargs, default_retries=self.default_retries)
+        deps = list({f.task_id: f for f in _iter_futures((args, kwargs))}.values())
+        rec.depends_on = [f.record for f in deps]
+        with self._lock:
+            self.tasks[rec.task_id] = rec
+            self.stats["submitted"] += 1
+            self._outstanding += 1
+            pending = [f for f in deps if not f.done()]
+            for f in pending:
+                self._children.setdefault(f.task_id, []).append(rec)
+        if self.monitor is not None:
+            self.monitor.record_task_event(rec.task_id, "submitted", name=rec.name,
+                                           resources=rec.resources.asdict())
+        if not pending:
+            if self._claim_ready(rec):
+                self._maybe_dispatch(rec)
+        else:
+            for f in pending:
+                f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
+        return rec.future  # type: ignore[return-value]
+
+    def _dep_done(self, rec: TaskRecord) -> None:
+        if not self._claim_ready(rec):
+            return
+        self._maybe_dispatch(rec)
+
+    def _claim_ready(self, rec: TaskRecord) -> bool:
+        """Atomically move PENDING -> READY once all parents resolved.
+
+        Multiple parent futures may complete concurrently and each fires a
+        callback; exactly one caller wins the claim, preventing duplicate
+        dispatch (and duplicate execution) of multi-parent tasks.
+        """
+        with self._lock:
+            if rec.state is not TaskState.PENDING:
+                return False
+            if not all(p.future.done() for p in rec.depends_on):  # type: ignore[union-attr]
+                return False
+            rec.state = TaskState.READY
+            return True
+
+    def _maybe_dispatch(self, rec: TaskRecord) -> None:
+        """Dispatch a READY-claimed task (or fail it on parent failure)."""
+        failed_parent = next(
+            (p for p in rec.depends_on
+             if p.state in (TaskState.FAILED, TaskState.DEP_FAILED)), None)
+        if failed_parent is not None:
+            err = DependencyError(
+                f"dependency {failed_parent.task_id} ({failed_parent.name}) failed",
+                root_cause=failed_parent.exception)
+            report = self._make_report(rec, err, node=None, pool=None, worker=None)
+            self._route_failure(rec, report, err)
+            return
+        # dependencies satisfied: materialize parent results into the args
+        rec.args = _resolve(rec.args)
+        rec.kwargs = _resolve(rec.kwargs)
+        self._dispatch(rec)
+
+    def _dispatch(self, rec: TaskRecord) -> None:
+        pool_name = rec.target_pool or self.default_pool
+        ex = self.executors.get(pool_name)
+        if ex is None:
+            err = ResourceStarvationError(f"no executor for pool {pool_name!r}")
+            self._route_failure(rec, self._make_report(rec, err), err)
+            return
+        node = ex.submit(rec)
+        if node is None:
+            err = ResourceStarvationError(
+                f"no eligible node in pool {pool_name!r} "
+                f"(denylist={sorted(self.denylist)})", pool=pool_name)
+            self._route_failure(rec, self._make_report(rec, err, pool=pool_name), err)
+            return
+        with self._lock:
+            rec.state = TaskState.SCHEDULED
+            self._assignment[rec.task_id] = (pool_name, node.name)
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                rec.task_id, "scheduled", pool=pool_name, node=node.name,
+                attempt=rec.retry_count)
+
+    # ------------------------------------------------------------------ #
+    # results & failure routing
+    # ------------------------------------------------------------------ #
+    def _on_result(self, rec: TaskRecord, result: Any,
+                   err: BaseException | None, worker: Any) -> None:
+        pool, node = self._assignment.get(rec.task_id, (None, None))
+        duration = rec.end_time - rec.start_time
+        rec.record_attempt(node=node or "?", pool=pool or "?",
+                           worker=getattr(worker, "worker_id", "?"),
+                           ok=err is None, error=type(err).__name__ if err else None,
+                           duration=duration)
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                rec.task_id, "finished" if err is None else "error",
+                node=node, pool=pool, duration=duration,
+                error=type(err).__name__ if err else None)
+            if node:
+                self.monitor.record_task_placement(
+                    rec.name, node, pool, ok=err is None)
+        with self._lock:
+            if self._done_first.get(rec.task_id):
+                return  # a speculative copy already finished this task
+            if err is None:
+                self._done_first[rec.task_id] = True
+                rec.state = TaskState.COMPLETED
+                if rec.retry_count > 0:
+                    self.stats["retry_success"] += 1
+                self.stats["completed"] += 1
+        if err is None:
+            self._finish(rec, result=result)
+        else:
+            if getattr(rec, "is_speculative", False):
+                return  # backup copy failed; the original is still in flight
+            report = self._make_report(rec, err, node=node, pool=pool,
+                                       worker=getattr(worker, "worker_id", None))
+            self._route_failure(rec, report, err)
+
+    def _make_report(self, rec: TaskRecord, err: BaseException, *,
+                     node: str | None = None, pool: str | None = None,
+                     worker: str | None = None) -> FailureReport:
+        profile: dict[str, float] = {}
+        if node:
+            n = self.cluster.find_node(node)
+            if n is not None:
+                profile = {
+                    "node_memory_gb": n.memory_gb,
+                    "node_mem_in_use_gb": n.mem_in_use_gb,
+                    "node_speed": n.speed,
+                    "node_healthy": float(n.healthy),
+                    "node_ulimit_files": float(n.ulimit_files),
+                }
+        report = FailureReport.from_exception(
+            err, task_id=rec.task_id, node=node, pool=pool, worker=worker,
+            resource_profile=profile, requirements=rec.effective_resources().asdict(),
+            retry_count=rec.retry_count, timestamp=time.time())
+        if self.monitor is not None:
+            self.monitor.report_failure(report)
+        return report
+
+    def _route_failure(self, rec: TaskRecord, report: FailureReport,
+                       err: BaseException) -> None:
+        t0 = time.perf_counter()
+        try:
+            decision = self.retry_handler(rec, report, self.context())
+        except Exception as handler_err:  # noqa: BLE001 - handler bug = fail task
+            decision = RetryDecision(Action.FAIL,
+                                     reason=f"retry handler error: {handler_err!r}")
+        self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+
+        # engine invariant: a child whose parent terminally failed can never
+        # be re-executed (its arguments are unresolvable) — coerce to FAIL
+        # even if a (buggy) handler says otherwise.
+        if isinstance(err, DependencyError) and decision.action is not Action.FAIL:
+            decision = RetryDecision(
+                Action.FAIL, reason=f"dependency failure is terminal "
+                                    f"(handler said {decision.action.value})")
+
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                rec.task_id, "retry_decision", action=decision.action.value,
+                reason=decision.reason, rung=decision.rung,
+                target_pool=decision.target_pool, target_node=decision.target_node)
+
+        if decision.action is Action.RESTART_AND_RETRY and decision.restart_component:
+            kind, _, where = decision.restart_component.partition(":")
+            if kind == "worker" and where:
+                pool, _node = self._assignment.get(rec.task_id, (None, None))
+                ex = self.executors.get(pool or self.default_pool)
+                if ex is not None:
+                    self.stats["restarts"] += ex.restart_workers(where)
+
+        if decision.action in (Action.RETRY, Action.RESTART_AND_RETRY):
+            with self._lock:
+                rec.retry_count += 1
+                self.stats["retries"] += 1
+                rec.state = TaskState.RETRYING
+                rec.target_pool = decision.target_pool
+                rec.target_node = decision.target_node
+                if decision.resource_overrides:
+                    rec.resource_overrides.update(decision.resource_overrides)
+            if decision.delay_s > 0:
+                timer = threading.Timer(decision.delay_s, self._dispatch, args=(rec,))
+                timer.daemon = True
+                timer.start()
+            else:
+                self._dispatch(rec)
+            return
+
+        # terminal failure
+        is_dep = isinstance(err, DependencyError)
+        with self._lock:
+            self._done_first[rec.task_id] = True
+            rec.state = TaskState.DEP_FAILED if is_dep else TaskState.FAILED
+            rec.exception = err
+            self.stats["dep_failed" if is_dep else "failed"] += 1
+        self._finish(rec, error=err)
+
+    def _finish(self, rec: TaskRecord, *, result: Any = None,
+                error: BaseException | None = None) -> None:
+        fut = rec.future
+        assert fut is not None
+        with self._all_done:
+            if getattr(rec, "_finished", False) or fut.done():
+                return  # idempotent: speculation/races must not double-set
+            rec._finished = True  # type: ignore[attr-defined]
+            self._outstanding -= 1
+            if self._outstanding <= 0:
+                self._all_done.notify_all()
+        if error is None:
+            fut.set_result(result)
+        else:
+            fut.set_exception(error)
+
+    # ------------------------------------------------------------------ #
+    # watchers: heartbeat loss + stragglers
+    # ------------------------------------------------------------------ #
+    def _watch_loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self._check_heartbeats()
+                if self.speculative_execution:
+                    self._check_stragglers()
+            except Exception:  # noqa: BLE001 - watcher must not die
+                pass
+            time.sleep(self.heartbeat_period)
+
+    def _check_heartbeats(self) -> None:
+        if self.monitor is None:
+            return
+        now = time.time()
+        stale_after = self.heartbeat_period * self.heartbeat_threshold
+        for node_name, last in list(self.monitor.last_heartbeats().items()):
+            node = self.cluster.find_node(node_name)
+            if node is None:
+                continue
+            if now - last > stale_after and node_name not in self.denylist:
+                # silent node: environment-layer failure detected via
+                # heartbeat loss (paper §III-B / §IV)
+                self.monitor.record_system_event(
+                    "heartbeat_lost", node=node_name, stale_s=now - last)
+                self._fail_tasks_on_node(node_name)
+            elif now - last <= stale_after and node_name in self.denylist:
+                # node resumed communication: HTCondor-style un-denylist
+                # is handled by the policy engine via monitor events
+                self.monitor.record_system_event("heartbeat_resumed", node=node_name)
+
+    def _fail_tasks_on_node(self, node_name: str) -> None:
+        victims = [rec for tid, rec in self.tasks.items()
+                   if self._assignment.get(tid, (None, None))[1] == node_name
+                   and rec.state in (TaskState.SCHEDULED, TaskState.RUNNING)
+                   and not self._done_first.get(tid)]
+        for rec in victims:
+            err = HardwareShutdownError(
+                f"node {node_name} lost (heartbeat silent)", node=node_name)
+            report = self._make_report(rec, err, node=node_name,
+                                       pool=self._assignment[rec.task_id][0])
+            self._route_failure(rec, report, err)
+
+    def _check_stragglers(self) -> None:
+        now = time.time()
+        for tid, rec in list(self.tasks.items()):
+            if self._done_first.get(tid) or tid in self._speculated:
+                continue
+            est = rec.resources.est_duration_s
+            if est <= 0 or rec.start_time <= 0:
+                continue
+            if rec.state is TaskState.SCHEDULED and now - rec.start_time > self.straggler_factor * est:
+                self._speculated.add(tid)
+                self.stats["speculations"] += 1
+                pool, node = self._assignment.get(tid, (self.default_pool, None))
+                copy = TaskRecord(
+                    task_id=tid, fn=rec.fn, name=rec.name, args=rec.args,
+                    kwargs=rec.kwargs, resources=rec.resources,
+                    max_retries=0, future=rec.future)
+                copy.is_speculative = True  # type: ignore[attr-defined]
+                ex = self.executors.get(pool or self.default_pool)
+                if ex is None:
+                    continue
+                # place the backup copy away from the straggler node
+                for cand in ex.eligible_nodes(copy):
+                    if cand.name != node:
+                        copy.target_node = cand.name
+                        break
+                ex.submit(copy)
+                if self.monitor is not None:
+                    self.monitor.record_task_event(
+                        tid, "speculative_copy", original_node=node)
+
+    # ------------------------------------------------------------------ #
+    # sync helpers
+    # ------------------------------------------------------------------ #
+    def wait_all(self, timeout: float | None = None) -> bool:
+        with self._all_done:
+            if self._outstanding <= 0:
+                return True
+            return self._all_done.wait(timeout)
+
+    def makespan(self) -> float:
+        return time.time() - self.stats["start_time"]
+
+    def success_rates(self) -> dict[str, float]:
+        total = self.stats["submitted"]
+        retried = self.stats["retries"]
+        return {
+            "task_success_rate": self.stats["completed"] / total if total else 0.0,
+            "retry_success_rate": (self.stats["retry_success"] / retried) if retried else 0.0,
+            "tasks": total,
+            "retries": retried,
+        }

@@ -1,0 +1,211 @@
+"""Task definitions, futures, and per-task bookkeeping (Application layer).
+
+Mirrors Parsl's ``python_app`` interface: decorating a function with
+``@task`` yields a :class:`TaskDef`; invoking it while a
+:class:`~repro.engine.dfk.DataFlowKernel` session is active returns an
+:class:`AppFuture`.  Futures may be passed as arguments to other tasks to
+express DAG dependencies.
+"""
+from __future__ import annotations
+
+import enum
+import itertools
+import threading
+import time
+from concurrent.futures import Future
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+
+class TaskState(enum.Enum):
+    PENDING = "pending"        # waiting on dependencies
+    READY = "ready"            # dependencies met, waiting for dispatch
+    SCHEDULED = "scheduled"    # handed to an executor
+    RUNNING = "running"        # picked up by a worker
+    RETRYING = "retrying"      # failed, retry decision pending/made
+    COMPLETED = "completed"
+    FAILED = "failed"          # terminally failed (no retries remain / fail-fast)
+    DEP_FAILED = "dep_failed"  # a parent terminally failed
+
+
+@dataclass(frozen=True)
+class ResourceSpec:
+    """Declared resource requirements of a task (Runtime-layer contract).
+
+    ``memory_gb`` is matched against node capacity; ``packages`` against the
+    node environment; ``open_files`` against the node ulimit.  These drive
+    both the failure *injection* (a node that can't satisfy the spec fails
+    the task the way a real machine would) and the WRATH resource analysis
+    (the categorization engine compares spec vs. node profile).
+    """
+
+    memory_gb: float = 0.5
+    cpus: int = 1
+    packages: tuple[str, ...] = ()
+    open_files: int = 16
+    # estimated duration used by straggler detection (0 = unknown)
+    est_duration_s: float = 0.0
+
+    def asdict(self) -> dict[str, Any]:
+        return {
+            "memory_gb": self.memory_gb,
+            "cpus": self.cpus,
+            "packages": list(self.packages),
+            "open_files": self.open_files,
+            "est_duration_s": self.est_duration_s,
+        }
+
+
+class AppFuture(Future):
+    """Future for a task invocation; hashable and usable as a dependency."""
+
+    def __init__(self, record: "TaskRecord"):
+        super().__init__()
+        self.record = record
+
+    @property
+    def task_id(self) -> str:
+        return self.record.task_id
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"<AppFuture {self.record.task_id} {self.record.state.value}>"
+
+
+_task_counter = itertools.count()
+
+
+@dataclass
+class TaskRecord:
+    """Full bookkeeping for one task invocation (Framework layer state)."""
+
+    task_id: str
+    fn: Callable[..., Any]
+    name: str
+    args: tuple
+    kwargs: dict
+    resources: ResourceSpec
+    max_retries: int
+    state: TaskState = TaskState.PENDING
+    depends_on: list["TaskRecord"] = field(default_factory=list)
+    future: AppFuture | None = None
+    # --- execution history ---------------------------------------------
+    retry_count: int = 0
+    attempts: list[dict[str, Any]] = field(default_factory=list)
+    # placement chosen by the scheduler / retry handler for next attempt
+    target_pool: str | None = None
+    target_node: str | None = None
+    # resource overrides suggested by the resilience module (rung 1)
+    resource_overrides: dict[str, Any] = field(default_factory=dict)
+    submit_time: float = 0.0
+    start_time: float = 0.0
+    end_time: float = 0.0
+    exception: BaseException | None = None
+    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+
+    def effective_resources(self) -> ResourceSpec:
+        """Resources after applying WRATH rung-1 overrides."""
+        if not self.resource_overrides:
+            return self.resources
+        d = self.resources.asdict()
+        d.update(self.resource_overrides)
+        d["packages"] = tuple(d["packages"])
+        return ResourceSpec(**d)
+
+    def record_attempt(self, *, node: str, pool: str, worker: str,
+                       ok: bool, error: str | None, duration: float) -> None:
+        self.attempts.append({
+            "attempt": len(self.attempts),
+            "node": node,
+            "pool": pool,
+            "worker": worker,
+            "ok": ok,
+            "error": error,
+            "duration": duration,
+            "time": time.time(),
+        })
+
+
+@dataclass(frozen=True)
+class TaskDef:
+    """A task template produced by the :func:`task` decorator."""
+
+    fn: Callable[..., Any]
+    name: str
+    resources: ResourceSpec
+    max_retries: int | None
+
+    def __call__(self, *args: Any, **kwargs: Any) -> AppFuture:
+        from repro.engine.dfk import DataFlowKernel
+
+        dfk = DataFlowKernel.current()
+        if dfk is None:
+            raise RuntimeError(
+                f"task {self.name!r} invoked outside a DataFlowKernel session; "
+                "use `with DataFlowKernel(...) as dfk:`"
+            )
+        return dfk.submit(self, args, kwargs)
+
+    def options(self, **overrides: Any) -> "TaskDef":
+        """Return a copy with modified resources / retry settings."""
+        res = dict(self.resources.asdict())
+        max_retries = overrides.pop("max_retries", self.max_retries)
+        for k in list(overrides):
+            if k in res:
+                res[k] = overrides.pop(k)
+        if overrides:
+            raise TypeError(f"unknown task options: {sorted(overrides)}")
+        res["packages"] = tuple(res["packages"])
+        return TaskDef(self.fn, self.name, ResourceSpec(**res), max_retries)
+
+
+def task(
+    fn: Callable[..., Any] | None = None,
+    *,
+    name: str | None = None,
+    memory_gb: float = 0.5,
+    cpus: int = 1,
+    packages: tuple[str, ...] | list[str] = (),
+    open_files: int = 16,
+    est_duration_s: float = 0.0,
+    max_retries: int | None = None,
+) -> Any:
+    """Declare a TBPP task (Parsl ``python_app`` analog).
+
+    Example::
+
+        @task(memory_gb=2, packages=("numpy",))
+        def f(x):
+            return x + 1
+    """
+
+    def deco(f: Callable[..., Any]) -> TaskDef:
+        spec = ResourceSpec(
+            memory_gb=memory_gb,
+            cpus=cpus,
+            packages=tuple(packages),
+            open_files=open_files,
+            est_duration_s=est_duration_s,
+        )
+        return TaskDef(f, name or f.__name__, spec, max_retries)
+
+    if fn is not None:
+        return deco(fn)
+    return deco
+
+
+def new_task_record(
+    td: TaskDef, args: tuple, kwargs: dict, *, default_retries: int
+) -> TaskRecord:
+    tid = f"task-{next(_task_counter):06d}"
+    rec = TaskRecord(
+        task_id=tid,
+        fn=td.fn,
+        name=td.name,
+        args=args,
+        kwargs=kwargs,
+        resources=td.resources,
+        max_retries=td.max_retries if td.max_retries is not None else default_retries,
+        submit_time=time.time(),
+    )
+    rec.future = AppFuture(rec)
+    return rec

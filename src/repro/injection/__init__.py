@@ -1,0 +1,7 @@
+from repro.injection.engines import (
+    FAILURE_TYPES,
+    FailureInjector,
+    NoInjector,
+)
+
+__all__ = ["FailureInjector", "NoInjector", "FAILURE_TYPES"]

@@ -1,0 +1,12 @@
+"""Pallas TPU kernels for the substrate's compute hot spots.
+
+The WRATH paper itself has no kernel-level contribution (it is a
+control-plane resilience system); these kernels cover the two dominant
+compute hot spots of the model substrate per the hardware-adaptation
+directive: blockwise flash attention (8/10 archs) and the Mamba-2 SSD
+chunked scan (ssm/hybrid archs).  Validated in interpret mode against the
+pure-jnp oracles in ``ref.py``.
+"""
+from repro.kernels.ops import flash_attention, ssd_scan
+
+__all__ = ["flash_attention", "ssd_scan"]

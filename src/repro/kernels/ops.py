@@ -1,0 +1,46 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+``flash_attention`` takes model-layout tensors (B, S, H, D) with GQA
+(kv heads ≤ q heads) and handles head expansion + folding; ``ssd_scan``
+matches the signature of the pure-JAX ``repro.models.ssm.ssd_scan``.
+
+On this CPU container the kernels run with ``interpret=True`` (Pallas
+executes the kernel body in Python); on TPU pass ``interpret=False``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_bh
+from repro.kernels.ssd_scan import ssd_scan_kernel
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    q_block: int = 128, kv_block: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D)."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    if h != kvh:
+        rep = h // kvh
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    of = flash_attention_bh(qf, kf, vf, causal=causal, window=window,
+                            q_block=q_block, kv_block=kv_block,
+                            interpret=interpret)
+    return of.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+             c: jax.Array, *, chunk: int = 128,
+             interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """Grouped (G=1) SSD scan; see ssd_scan_kernel for shapes."""
+    if b.ndim == 4:                         # (B, L, G, N) with G == 1
+        b = b[:, :, 0]
+        c = c[:, :, 0]
+    return ssd_scan_kernel(x, dt, a, b, c, chunk=chunk, interpret=interpret)

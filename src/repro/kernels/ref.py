@@ -1,0 +1,53 @@
+"""Pure-jnp oracles for the Pallas kernels."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True, window: int = 0) -> jax.Array:
+    """q, k, v: (BH, S, D) — dense softmax attention in fp32."""
+    bh, s, d = q.shape
+    sk = k.shape[1]
+    scores = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) / math.sqrt(d)
+    q_pos = jnp.arange(s)[:, None]
+    k_pos = jnp.arange(sk)[None, :]
+    mask = jnp.ones((s, sk), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask, scores, -1e30)
+    p = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+            c: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Naive per-step SSD recurrence (fp32).
+
+    x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, N)  [G=1].
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                          # (B,H,P),(B,H),(B,N),(B,N)
+        decay = jnp.exp(dtt * a[None, :])              # (B,H)
+        upd = jnp.einsum("bhp,bn,bh->bhpn", xt, bt, dtt)
+        state = state * decay[..., None, None] + upd
+        y = jnp.einsum("bhpn,bn->bhp", state, ct)
+        return state, y
+
+    s0 = jnp.zeros((bb, h, p, n), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          b.astype(jnp.float32).transpose(1, 0, 2),
+          c.astype(jnp.float32).transpose(1, 0, 2))
+    final, ys = jax.lax.scan(step, s0, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), final.astype(x.dtype)

@@ -1,0 +1,116 @@
+"""Mamba-2 SSD chunked-scan Pallas TPU kernel.
+
+TPU adaptation of the SSD algorithm (DESIGN.md §6): grid = (batch, heads,
+chunks) with the chunk axis sequential; the running state (P × N) lives in
+VMEM scratch across chunk steps.  Per chunk (Q = chunk length, MXU-aligned
+128 by default):
+
+    da       = dt ⊙ A                     (Q,)
+    L        = exp(segsum(da))            (Q, Q) lower-triangular decay
+    y_diag   = ((C Bᵀ) ⊙ L) (x ⊙ dt)      intra-chunk, two MXU matmuls
+    y_off    = exp(cumsum(da)) ⊙ (C · state)        carried-state term
+    state    = exp(sum(da)) · state + (B ⊙ decay)ᵀ (x ⊙ dt)
+
+All accumulation in fp32.  G=1 (single B/C group), the configuration used
+by mamba2-780m.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_out_ref,
+            state_ref, *, q: int, p: int, n: int, nc: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)          # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)           # (Q,)
+    a = a_ref[0].astype(jnp.float32)                   # ()
+    b = b_ref[0].astype(jnp.float32)                   # (Q, N)
+    c = c_ref[0].astype(jnp.float32)                   # (Q, N)
+
+    da = dt * a                                        # (Q,)
+    da_cs = jnp.cumsum(da)                             # (Q,)
+    # segsum: L[i, j] = exp(sum(da[j+1..i])) for i >= j
+    diff = da_cs[:, None] - da_cs[None, :] + jnp.diag(da) * 0.0
+    row = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    lmask = row >= col
+    l_decay = jnp.where(lmask, jnp.exp(diff), 0.0)     # (Q, Q)
+
+    xdt = x * dt[:, None]                              # (Q, P)
+    cb = jax.lax.dot_general(c, b, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (Q, Q)
+    y = jax.lax.dot_general(cb * l_decay, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (Q, P)
+
+    # carried-state contribution: exp(cumsum) ⊙ (C @ stateᵀ)
+    state = state_ref[...]                             # (P, N)
+    y += jnp.exp(da_cs)[:, None] * jax.lax.dot_general(
+        c, state, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (Q, P)
+
+    # state update
+    total = da_cs[-1]
+    decay_in = jnp.exp(total - da_cs)                  # (Q,)
+    contrib = jax.lax.dot_general(
+        xdt, b * decay_in[:, None], (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)            # (P, N)
+    state_ref[...] = state * jnp.exp(total) + contrib
+
+    y_ref[0, :, 0, :] = y.astype(y_ref.dtype)
+
+    @pl.when(ci == nc - 1)
+    def _final():
+        state_out_ref[0, 0] = state_ref[...].astype(state_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                    c: jax.Array, *, chunk: int = 128,
+                    interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, N).
+
+    Returns (y (B, L, H, P), final_state (B, H, P, N)).
+    """
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+    q = min(chunk, l)
+    if l % q:
+        raise ValueError(f"L={l} not divisible by chunk={q}")
+    nc = l // q
+
+    kernel = functools.partial(_kernel, q=q, p=p, n=n, nc=nc)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=(bb, h, nc),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, q, 1), lambda bi, hi, ci: (bi, ci, hi)),
+            pl.BlockSpec((1,), lambda bi, hi, ci: (hi,)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+            pl.BlockSpec((1, q, n), lambda bi, hi, ci: (bi, ci, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q, 1, p), lambda bi, hi, ci: (bi, ci, hi, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bb, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bb, h, p, n), x.dtype),
+        ],
+        scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(x, dt, a, b, c)
+    return y, state

@@ -1,0 +1,63 @@
+"""WRATH-supervised serving launcher.
+
+    python -m repro.launch.serve --arch olmoe-1b-7b --requests 16 \
+        --replicas 3 --kill replica0:5
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_smoke_config
+from repro.serve import Request, WrathServeDriver
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="granite-3-2b",
+                    help=f"one of {', '.join(a.replace('_', '-') for a in ARCH_IDS)}")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=6)
+    ap.add_argument("--replicas", type=int, default=3)
+    ap.add_argument("--max-batch", type=int, default=4)
+    ap.add_argument("--kill", default=None,
+                    help="replica:step — kill a replica mid-decode")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--json", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch)
+    driver = WrathServeDriver(cfg, n_replicas=args.replicas,
+                              max_batch=args.max_batch, seed=args.seed)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size,
+                                        size=args.prompt_len).tolist(),
+                    max_new_tokens=args.new_tokens)
+            for i in range(args.requests)]
+    kill = None
+    if args.kill:
+        name, _, step = args.kill.partition(":")
+        kill = (name, int(step or 5))
+    rep = driver.serve(reqs, kill_replica_at=kill)
+
+    if args.json:
+        print(json.dumps({
+            "arch": cfg.name, "completed": rep.completed, "failed": rep.failed,
+            "tokens": rep.tokens_generated, "tokens_per_s": rep.tokens_per_s,
+            "denylisted": rep.denylisted, "recoveries": rep.recoveries,
+        }, indent=1))
+        return
+    print(f"{cfg.name}: {rep.completed}/{len(reqs)} requests, "
+          f"{rep.tokens_generated} tokens ({rep.tokens_per_s:.1f} tok/s)")
+    if rep.denylisted:
+        print(f"denylisted replicas: {rep.denylisted}")
+    for r in rep.recoveries:
+        print(f"  recovery: {r['replica']} at step {r['step']} -> {r['action']}")
+
+
+if __name__ == "__main__":
+    main()

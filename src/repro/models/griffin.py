@@ -1,0 +1,115 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma — arXiv:2402.19427).
+
+Block structure (the Griffin "recurrent block"): two parallel linear
+branches from the input; branch 1 -> GeLU gate; branch 2 -> depthwise
+causal conv -> RG-LRU; elementwise product; output projection.
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a x_t)                     (recurrence gate)
+    i_t = sigmoid(W_x x_t)                     (input gate)
+    log a_t = -c * softplus(Lambda) * r_t      (c = 8)
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (the
+recurrence is a linear first-order scan); decode is the O(1) update.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, RGLRUCfg
+from repro.models.layers import constrain
+from repro.models.spec import ParamDef, pdef
+
+_C = 8.0
+
+
+def rglru_dims(cfg: ModelConfig) -> dict[str, int]:
+    g: RGLRUCfg = cfg.rglru  # type: ignore[assignment]
+    return {"lru_width": g.lru_width or cfg.d_model}
+
+
+def make_rglru_defs(cfg: ModelConfig) -> dict:
+    g: RGLRUCfg = cfg.rglru  # type: ignore[assignment]
+    d = cfg.d_model
+    w = rglru_dims(cfg)["lru_width"]
+    return {
+        "in_gate": pdef((d, "d_model"), (w, "d_ff")),       # GeLU branch
+        "in_lin": pdef((d, "d_model"), (w, "d_ff")),        # conv+LRU branch
+        "conv_w": pdef((g.conv_width, None), (w, "d_ff"), scale=0.5),
+        "conv_b": pdef((w, "d_ff"), init="zeros"),
+        "w_a": pdef((w, "d_ff"), (w, "d_ff"), scale=0.02),
+        "b_a": pdef((w, "d_ff"), init="zeros", dtype=jnp.float32),
+        "w_x": pdef((w, "d_ff"), (w, "d_ff"), scale=0.02),
+        "b_x": pdef((w, "d_ff"), init="zeros", dtype=jnp.float32),
+        "lam": pdef((w, "d_ff"), init="ones", dtype=jnp.float32),
+        "out_proj": pdef((w, "d_ff"), (cfg.d_model, "d_model")),
+    }
+
+
+def _rglru_core(params: dict, x: jax.Array,
+                h0: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """x: (B, L, W) post-conv activations -> (y, h_last)."""
+    r = jax.nn.sigmoid((x @ params["w_a"]).astype(jnp.float32)
+                       + params["b_a"][None, None])
+    i = jax.nn.sigmoid((x @ params["w_x"]).astype(jnp.float32)
+                       + params["b_x"][None, None])
+    log_a = -_C * jax.nn.softplus(params["lam"])[None, None] * r   # (B,L,W)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * i * x.astype(jnp.float32)
+    if h0 is not None:
+        # fold the carried state into the first step: h_1 = a_1 h_0 + b_1
+        gated = gated.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+        # and neutralize a_1 so the scan composition stays correct
+        a = a.at[:, 0].set(jnp.ones_like(a[:, 0]))
+
+    def compose(left, right):
+        a1, b1 = left
+        a2, b2 = right
+        return a1 * a2, a2 * b1 + b2
+
+    a_out, h = jax.lax.associative_scan(compose, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1]
+
+
+def rglru_block_train(params: dict, x: jax.Array, cfg: ModelConfig, *,
+                      return_state: bool = False):
+    gate = jax.nn.gelu(x @ params["in_gate"])
+    lin = x @ params["in_lin"]
+    lin = constrain(lin, ("batch", "seq", "d_ff"))
+    width = params["conv_w"].shape[0]
+    state = jnp.zeros((x.shape[0], width - 1, lin.shape[-1]), lin.dtype)
+    xp = jnp.concatenate([state, lin], axis=1)
+    conv = sum(xp[:, i:i + lin.shape[1]] * params["conv_w"][i][None, None]
+               for i in range(width)) + params["conv_b"][None, None]
+    y, h_last = _rglru_core(params, conv)
+    y = constrain(y, ("batch", "seq", "d_ff"))
+    out = (y * gate) @ params["out_proj"]
+    if return_state:
+        return out, {"conv": lin[:, -(width - 1):],
+                     "h": h_last.astype(x.dtype)}
+    return out
+
+
+def rglru_block_decode(params: dict, x: jax.Array, cache: dict,
+                       cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """cache: {"conv": (B, W-1, lru_width), "h": (B, lru_width)}."""
+    gate = jax.nn.gelu(x @ params["in_gate"])            # (B,1,W)
+    lin = x @ params["in_lin"]
+    width = params["conv_w"].shape[0]
+    xp = jnp.concatenate([cache["conv"], lin], axis=1)   # (B, W, lru)
+    conv = (xp * params["conv_w"][None]).sum(axis=1, keepdims=True) \
+        + params["conv_b"][None, None]
+    new_conv = xp[:, 1:]
+    xt = conv[:, 0]                                      # (B, W)
+    r = jax.nn.sigmoid((xt @ params["w_a"]).astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid((xt @ params["w_x"]).astype(jnp.float32) + params["b_x"])
+    log_a = -_C * jax.nn.softplus(params["lam"])[None] * r
+    a = jnp.exp(log_a)
+    h = a * cache["h"].astype(jnp.float32) \
+        + jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-6)) \
+        * i * xt.astype(jnp.float32)
+    y = (h.astype(x.dtype)[:, None] * gate) @ params["out_proj"]
+    return y, {"conv": new_conv, "h": h.astype(x.dtype)}

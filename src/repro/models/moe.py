@@ -1,0 +1,293 @@
+"""Mixture-of-Experts FFN: shared + routed experts, top-k routing.
+
+Two dispatch implementations (selected by ``MoECfg.dispatch``):
+
+* ``gshard``  — classic einsum one-hot dispatch/combine.  Exact and simple
+  but its dispatch einsum costs O(T·E·C·d) FLOPs, so it is reserved for
+  small smoke-test scales where it doubles as the correctness oracle.
+* ``scatter`` — scatter/gather dispatch: token→expert routing is done with
+  a capacity-bounded scatter into an (E, C, d) buffer and a gather back.
+  Data movement is O(T·k·d) and the expert matmuls dominate FLOPs, which
+  is the correct roofline structure at DeepSeek-V3 scale.  Under pjit with
+  tokens sharded on ``data`` and experts on ``model``, XLA materializes
+  the expert-parallel collectives around the scatter/gather.
+
+Both return ``(y, aux)`` where ``aux`` carries the load-balancing loss.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig, MoECfg
+from repro.models.layers import constrain
+from repro.models.spec import ParamDef, pdef
+
+
+def make_moe_defs(cfg: ModelConfig) -> dict:
+    m: MoECfg = cfg.moe  # type: ignore[assignment]
+    d = cfg.d_model
+    defs: dict = {
+        "router": pdef((d, "d_model"), (m.n_experts, None), dtype=jnp.float32),
+        "experts": {
+            "w1": pdef((m.n_experts, "experts"), (d, "d_model"), (m.d_ff_expert, "d_ff")),
+            "w3": pdef((m.n_experts, "experts"), (d, "d_model"), (m.d_ff_expert, "d_ff")),
+            "w2": pdef((m.n_experts, "experts"), (m.d_ff_expert, "d_ff"), (d, "d_model")),
+        },
+    }
+    if m.n_shared:
+        defs["shared"] = {
+            "w1": pdef((d, "d_model"), (m.shared_ff, "d_ff")),
+            "w3": pdef((d, "d_model"), (m.shared_ff, "d_ff")),
+            "w2": pdef((m.shared_ff, "d_ff"), (d, "d_model")),
+        }
+    return defs
+
+
+def _route(params: dict, xf: jax.Array, m: MoECfg) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """xf: (T, d) -> (weights (T,k), idx (T,k), aux_loss scalar)."""
+    logits = (xf.astype(jnp.float32) @ params["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, m.top_k)                        # (T, k)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss
+    me = probs.mean(0)                                            # (E,)
+    ce = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(
+        1.0 / (idx.size))
+    aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+    return w.astype(xf.dtype), idx, aux
+
+
+def _expert_ffn(experts: dict, h_in: jax.Array) -> jax.Array:
+    """h_in: (E, C, d) -> (E, C, d); per-expert SwiGLU."""
+    a = jnp.einsum("ecd,edf->ecf", h_in, experts["w1"])
+    b = jnp.einsum("ecd,edf->ecf", h_in, experts["w3"])
+    h = jax.nn.silu(a) * b
+    h = constrain(h, ("experts", None, "d_ff"))
+    return jnp.einsum("ecf,efd->ecd", h, experts["w2"])
+
+
+def _capacity(m: MoECfg, t: int) -> int:
+    c = int(m.capacity_factor * t * m.top_k / m.n_experts)
+    return max(8, min(t, -(-c // 8) * 8))  # round up to 8, clamp
+
+
+def moe_gshard(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Einsum one-hot dispatch (exact oracle, small scale)."""
+    m: MoECfg = cfg.moe  # type: ignore[assignment]
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, idx, aux = _route(params, xf, m)
+    cap = _capacity(m, t)
+    onehot = jax.nn.one_hot(idx, m.n_experts, dtype=jnp.int32)    # (T,k,E)
+    pos = jnp.cumsum(onehot.sum(1), axis=0) - onehot.sum(1)       # (T,E) slots before t
+    pos_k = pos[:, None, :] + jnp.cumsum(onehot, axis=1) - onehot  # (T,k,E)
+    in_cap = (pos_k < cap) & (onehot > 0)
+    pos_oh = jax.nn.one_hot(jnp.where(in_cap, pos_k, cap), cap + 1,
+                            dtype=xf.dtype)[..., :cap]            # (T,k,E,C)
+    dispatch = (pos_oh * in_cap[..., None]).sum(1)                # (T,E,C)
+    combine = (pos_oh * (w[..., None, None] * in_cap[..., None])).sum(1)
+    h_in = jnp.einsum("tec,td->ecd", dispatch, xf)
+    h_out = _expert_ffn(params["experts"], h_in)
+    y = jnp.einsum("tec,ecd->td", combine, h_out)
+    if m.n_shared:
+        sh = params["shared"]
+        y = y + (jax.nn.silu(xf @ sh["w1"]) * (xf @ sh["w3"])) @ sh["w2"]
+    return y.reshape(b, s, d), aux
+
+
+def _positions_hierarchical(e_flat: jax.Array, n_experts: int) -> jax.Array:
+    """Position of each assignment within its expert, via a two-level scan:
+    shard-local cumsum (no cross-device dependency) + an exclusive cumsum
+    of tiny per-chunk counts.  Replaces the global (T·k × E) cumsum whose
+    sequential cross-shard dependency made XLA all-gather the one-hot
+    matrix (EXPERIMENTS.md §Perf, deepseek-v3 hillclimb)."""
+    tk = e_flat.shape[0]
+    n_chunks = 1
+    for cand in (64, 32, 16, 8, 4, 2):
+        if tk % cand == 0 and tk // cand >= 1:
+            n_chunks = cand
+            break
+    l = tk // n_chunks
+    ec = e_flat.reshape(n_chunks, l)
+    oh = jax.nn.one_hot(ec, n_experts, dtype=jnp.int32)          # (C, L, E)
+    oh = constrain(oh, ("batch", None, None))
+    local = jnp.cumsum(oh, axis=1) - oh                          # within chunk
+    counts = oh.sum(axis=1)                                      # (C, E)
+    offsets = jnp.cumsum(counts, axis=0) - counts                # exclusive
+    pos = jnp.take_along_axis(local + offsets[:, None, :],
+                              ec[..., None], axis=2)[..., 0]
+    return pos.reshape(tk)
+
+
+def moe_scatter(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    """Scatter/gather dispatch (scale path; dry-run default)."""
+    m: MoECfg = cfg.moe  # type: ignore[assignment]
+    b, s, d = x.shape
+    t = b * s
+    xf = x.reshape(t, d)
+    w, idx, aux = _route(params, xf, m)
+    cap = _capacity(m, t)
+
+    e_flat = idx.reshape(-1)                                      # (T*k,)
+    pos_flat = _positions_hierarchical(e_flat, m.n_experts)
+    keep = pos_flat < cap
+    slot_e = jnp.where(keep, e_flat, 0)
+    slot_c = jnp.where(keep, pos_flat, 0)
+
+    x_rep = jnp.repeat(xf, m.top_k, axis=0)                       # (T*k, d)
+    x_rep = jnp.where(keep[:, None], x_rep, 0)
+    buf = jnp.zeros((m.n_experts, cap, d), xf.dtype)
+    buf = buf.at[slot_e, slot_c].add(x_rep, mode="drop")
+    buf = constrain(buf, ("experts", None, "d_model"))
+
+    h_out = _expert_ffn(params["experts"], buf)                   # (E, C, d)
+    h_out = constrain(h_out, ("experts", None, "d_model"))
+
+    gathered = h_out[slot_e, slot_c]                              # (T*k, d)
+    gathered = jnp.where(keep[:, None], gathered, 0)
+    y = (gathered.reshape(t, m.top_k, d)
+         * w[..., None].astype(xf.dtype)).sum(axis=1)
+    if m.n_shared:
+        sh = params["shared"]
+        y = y + (jax.nn.silu(xf @ sh["w1"]) * (xf @ sh["w3"])) @ sh["w2"]
+    return y.reshape(b, s, d), aux
+
+
+def moe_shard_map(params: dict, x: jax.Array, cfg: ModelConfig
+                  ) -> tuple[jax.Array, jax.Array]:
+    """Expert-parallel MoE with explicit all-to-all (shard_map).
+
+    pjit's auto-partitioned scatter/gather dispatch materializes the full
+    (E, C, d) buffer per device and ALL-REDUCES it (≈2 PB/step at
+    deepseek-v3 scale, EXPERIMENTS.md §Perf).  The canonical fix routes
+    tokens with two ``all_to_all``s over the ``model`` (expert) axis:
+
+      local dispatch (scatter into the per-SENDER capacity buffer)
+      → all_to_all → local expert FFN → all_to_all back
+      → local combine → psum over the model axis.
+
+    Collective bytes drop from O(E·C_global·d · n_dev) to O(T·k·cf·d).
+    Falls back to ``moe_scatter`` when no mesh context is active.
+    """
+    from jax.sharding import PartitionSpec as P
+    from jax.experimental.shard_map import shard_map
+
+    from repro.models.layers import current_mesh
+
+    mesh = current_mesh()
+    m: MoECfg = cfg.moe  # type: ignore[assignment]
+    if mesh is None or "model" not in mesh.axis_names:
+        return moe_scatter(params, x, cfg)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    n_model = sizes["model"]
+    if m.n_experts % n_model:
+        return moe_scatter(params, x, cfg)
+    data_axes = tuple(a for a in mesh.axis_names if a != "model")
+    b, s, d = x.shape
+    n_data = 1
+    for a in data_axes:
+        n_data *= sizes[a]
+    # token slices must divide over the model axis per data shard; decode
+    # steps (one token per sequence) fall back to the scatter dispatch
+    if b % n_data or (b // n_data) * s % n_model:
+        return moe_scatter(params, x, cfg)
+    e_loc = m.n_experts // n_model
+    # expert weights enter in their FSDP layout (d_model sharded over the
+    # data axes) and are all-gathered explicitly inside; the transpose of
+    # all_gather is reduce_scatter, so weight grads leave the microbatch
+    # loop as reduce-scatters instead of full all-reduces (§Perf iter 4)
+    n_fsdp = 1
+    for a in data_axes:
+        n_fsdp *= sizes[a]
+    fsdp_ok = d % n_fsdp == 0
+
+    def local_moe(xb, router_w, w1, w3, w2):
+        # xb: (B_loc, S, d) — this data-shard's tokens, replicated over
+        # 'model'.  Each model shard dispatches its own 1/M token slice
+        # (token parallelism over the expert axis), so the expert FFNs see
+        # distinct rows from every peer; outputs are reassembled with an
+        # all_gather.  w1/w3/w2: (E_loc, d/n_fsdp, ...) FSDP shards.
+        if fsdp_ok and n_fsdp > 1:
+            w1 = jax.lax.all_gather(w1, data_axes, axis=1, tiled=True)
+            w3 = jax.lax.all_gather(w3, data_axes, axis=1, tiled=True)
+            w2 = jax.lax.all_gather(w2, data_axes, axis=2, tiled=True)
+        bl, sl, dl = xb.shape
+        t = bl * sl
+        assert t % n_model == 0, (t, n_model)
+        ts = t // n_model
+        j = jax.lax.axis_index("model")
+        xf = jax.lax.dynamic_slice_in_dim(
+            xb.reshape(t, dl), j * ts, ts, axis=0)               # (Ts, d)
+        logits = xf.astype(jnp.float32) @ router_w               # (Ts, E)
+        probs = jax.nn.softmax(logits, axis=-1)
+        wgt, idx = jax.lax.top_k(probs, m.top_k)
+        wgt = (wgt / jnp.maximum(wgt.sum(-1, keepdims=True), 1e-9)).astype(xb.dtype)
+        me = probs.mean(0)
+        ce = jnp.zeros((m.n_experts,), jnp.float32).at[idx.reshape(-1)].add(
+            1.0 / idx.size)
+        aux = m.n_experts * jnp.sum(me * ce) * m.router_aux_weight
+        aux = jax.lax.pmean(aux, "model")
+
+        cap = _capacity(m, ts)                                   # per sender
+        e_flat = idx.reshape(-1)                                 # (Ts*k,)
+        oh = jax.nn.one_hot(e_flat, m.n_experts, dtype=jnp.int32)
+        pos = jnp.take_along_axis(jnp.cumsum(oh, axis=0) - oh,
+                                  e_flat[:, None], axis=1)[:, 0]
+        keep = pos < cap
+        se = jnp.where(keep, e_flat, 0)
+        sc = jnp.where(keep, pos, 0)
+        x_rep = jnp.repeat(xf, m.top_k, axis=0)
+        x_rep = jnp.where(keep[:, None], x_rep, 0)
+        send = jnp.zeros((m.n_experts, cap, dl), xb.dtype)
+        send = send.at[se, sc].add(x_rep, mode="drop")           # local scatter
+
+        # route to expert owners: split E across 'model', gather senders
+        recv = jax.lax.all_to_all(
+            send.reshape(n_model, e_loc, cap, dl), "model",
+            split_axis=0, concat_axis=0, tiled=False)            # (M, E_loc, C, d)
+        h_in = recv.transpose(1, 0, 2, 3).reshape(e_loc, n_model * cap, dl)
+        a = jnp.einsum("ecd,edf->ecf", h_in, w1)
+        g = jnp.einsum("ecd,edf->ecf", h_in, w3)
+        h = jax.nn.silu(a) * g
+        h_out = jnp.einsum("ecf,efd->ecd", h, w2)                # (E_loc, M*C, d)
+        back = h_out.reshape(e_loc, n_model, cap, dl).transpose(1, 0, 2, 3)
+        mine = jax.lax.all_to_all(back, "model", split_axis=0,
+                                  concat_axis=0, tiled=False)    # (M, E_loc, C, d)
+        mine = mine.reshape(m.n_experts, cap, dl)
+
+        gathered = mine[se, sc]
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        y = (gathered.reshape(ts, m.top_k, dl) * wgt[..., None]).sum(axis=1)
+        # reassemble the full token set from the M slices
+        y = jax.lax.all_gather(y, "model", axis=0, tiled=True)   # (T, d)
+        return y.reshape(bl, sl, dl), aux
+
+    xspec = P(data_axes if len(data_axes) > 1 else data_axes[0], None, None)
+    fs = (data_axes if len(data_axes) > 1 else data_axes[0]) if fsdp_ok else None
+    e12 = P("model", fs, None)      # w1/w3: (E, d_model, ff)
+    e21 = P("model", None, fs)      # w2:    (E, ff, d_model)
+    y, aux = shard_map(
+        local_moe, mesh=mesh,
+        in_specs=(xspec, P(None, None), e12, e12, e21),
+        out_specs=(xspec, P()),
+        check_rep=False,
+    )(x, params["router"], params["experts"]["w1"], params["experts"]["w3"],
+      params["experts"]["w2"])
+
+    if m.n_shared:
+        sh = params["shared"]
+        xf = x.reshape(b * s, d)
+        y = y + ((jax.nn.silu(xf @ sh["w1"]) * (xf @ sh["w3"])) @ sh["w2"]
+                 ).reshape(b, s, d)
+    return y, aux
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> tuple[jax.Array, jax.Array]:
+    m: MoECfg = cfg.moe  # type: ignore[assignment]
+    if m.dispatch == "gshard":
+        return moe_gshard(params, x, cfg)
+    if m.dispatch == "shard_map":
+        return moe_shard_map(params, x, cfg)
+    return moe_scatter(params, x, cfg)

@@ -1,0 +1,101 @@
+"""Parameter specification trees.
+
+Every model defines its parameters once as a pytree of :class:`ParamDef`
+(shape + *logical axes* + init).  From that single definition we derive:
+
+* ``materialize(defs, key)``      — real initialized arrays (smoke tests);
+* ``abstract(defs)``              — ``jax.ShapeDtypeStruct`` stand-ins
+                                    (multi-pod dry-run, no allocation);
+* ``logical_axes(defs)``          — the logical-axis pytree consumed by the
+                                    sharding-rule engine to build
+                                    ``PartitionSpec`` trees.
+
+Logical axis names (see ``repro.distributed.sharding`` for the mesh
+mapping): ``batch seq d_model heads kv_heads head_dim d_ff vocab experts
+state conv none ...``
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    """One parameter: shape, logical axes (one name per dim), init scale."""
+
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"           # normal | zeros | ones | scaled
+    scale: float | None = None     # None -> 1/sqrt(fan_in)
+    dtype: Any = jnp.bfloat16
+
+    def __post_init__(self):
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes} rank mismatch")
+
+
+def pdef(*shape_axes: tuple[int, str | None], init: str = "normal",
+         scale: float | None = None, dtype: Any = jnp.bfloat16) -> ParamDef:
+    """``pdef((512,'d_model'), (2048,'d_ff'))``"""
+    shape = tuple(s for s, _ in shape_axes)
+    axes = tuple(a for _, a in shape_axes)
+    return ParamDef(shape, axes, init=init, scale=scale, dtype=dtype)
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _tree_map(fn: Callable[[ParamDef], Any], defs: Any) -> Any:
+    return jax.tree.map(fn, defs, is_leaf=is_def)
+
+
+def abstract(defs: Any) -> Any:
+    """ShapeDtypeStruct tree — zero allocation, dry-run input."""
+    return _tree_map(lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs)
+
+
+def logical_axes(defs: Any) -> Any:
+    return _tree_map(lambda d: d.axes, defs)
+
+
+def param_count(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) for d in leaves)
+
+
+def param_bytes(defs: Any) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=is_def)
+    return sum(int(np.prod(d.shape)) * jnp.dtype(d.dtype).itemsize for d in leaves)
+
+
+def materialize(defs: Any, key: jax.Array) -> Any:
+    """Real arrays.  Deterministic per-leaf keys via fold_in of a leaf index."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_def)
+
+    def init_one(i: int, d: ParamDef) -> jax.Array:
+        if d.init == "zeros":
+            return jnp.zeros(d.shape, d.dtype)
+        if d.init == "ones":
+            return jnp.ones(d.shape, d.dtype)
+        k = jax.random.fold_in(key, i)
+        fan_in = d.shape[0] if len(d.shape) >= 2 else max(d.shape[0], 1)
+        scale = d.scale if d.scale is not None else 1.0 / math.sqrt(fan_in)
+        return (jax.random.normal(k, d.shape, jnp.float32) * scale).astype(d.dtype)
+
+    return jax.tree.unflatten(treedef, [init_one(i, d) for i, d in enumerate(leaves)])
+
+
+def stack_defs(defs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Stack a layer's ParamDef tree n times along a new leading 'layers' axis
+    (the scan-over-layers representation)."""
+    return _tree_map(
+        lambda d: ParamDef((n,) + d.shape, (axis_name,) + d.axes,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs)

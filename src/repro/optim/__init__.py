@@ -1,0 +1,11 @@
+from repro.optim.adamw import (
+    OptConfig,
+    adamw_apply,
+    opt_state_defs,
+    init_opt_state,
+    lr_at,
+)
+from repro.optim.compress import compress_int8, decompress_int8
+
+__all__ = ["OptConfig", "adamw_apply", "opt_state_defs", "init_opt_state",
+           "lr_at", "compress_int8", "decompress_int8"]

@@ -1,0 +1,106 @@
+"""AdamW with dtype-configurable moments and warmup-cosine schedule.
+
+For ≥67B-parameter cells the Adam moments are stored in bf16 so that
+(params bf16 + m bf16 + v bf16 + fp32 master off) fits 16 GB/chip at 512
+chips (DESIGN.md §5); smaller models default to fp32 moments.  The state
+tree is expressible as ParamDefs so the dry-run can build it abstractly.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.spec import ParamDef, is_def
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"       # "bfloat16" for the huge cells
+
+    @property
+    def mdtype(self):
+        return jnp.dtype(self.moment_dtype)
+
+
+def lr_at(step: jax.Array, cfg: OptConfig) -> jax.Array:
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    frac = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = 0.5 * (1 + jnp.cos(math.pi * frac))
+    scale = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * scale
+
+
+def opt_state_defs(param_defs_tree: Any, cfg: OptConfig) -> dict:
+    """Abstract Adam state (for the dry-run): m, v mirror params."""
+
+    def moment(d: ParamDef) -> ParamDef:
+        return ParamDef(d.shape, d.axes, init="zeros", dtype=cfg.mdtype)
+
+    return {
+        "m": jax.tree.map(moment, param_defs_tree, is_leaf=is_def),
+        "v": jax.tree.map(moment, param_defs_tree, is_leaf=is_def),
+        "count": ParamDef((), (), init="zeros", dtype=jnp.int32),
+    }
+
+
+def init_opt_state(params: Any, cfg: OptConfig) -> dict:
+    return {
+        "m": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.mdtype), params),
+        "v": jax.tree.map(lambda p: jnp.zeros(p.shape, cfg.mdtype), params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_apply(params: Any, grads: Any, state: dict, cfg: OptConfig
+                ) -> tuple[Any, dict, dict]:
+    """One AdamW update.  Returns (params, state, metrics)."""
+    count = state["count"] + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9)) \
+        if cfg.clip_norm > 0 else jnp.float32(1.0)
+    lr = lr_at(count, cfg)
+    b1c = 1 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1 - cfg.b2 ** count.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m32 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g
+        v32 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g * g
+        mhat = m32 / b1c
+        vhat = v32 / b2c
+        step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if cfg.weight_decay and p.ndim >= 2:
+            step = step + cfg.weight_decay * p.astype(jnp.float32)
+        newp = p.astype(jnp.float32) - lr * step
+        return newp.astype(p.dtype), m32.astype(cfg.mdtype), v32.astype(cfg.mdtype)
+
+    flat_p, td = jax.tree.flatten(params)
+    flat_g = jax.tree.leaves(grads)
+    flat_m = jax.tree.leaves(state["m"])
+    flat_v = jax.tree.leaves(state["v"])
+    out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = jax.tree.unflatten(td, [o[0] for o in out])
+    new_m = jax.tree.unflatten(td, [o[1] for o in out])
+    new_v = jax.tree.unflatten(td, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "count": count}, metrics

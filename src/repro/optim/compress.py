@@ -1,0 +1,49 @@
+"""Int8 gradient compression with error feedback.
+
+Beyond-paper distributed-optimization trick (DESIGN.md §5): before the
+data-parallel all-reduce, gradients are quantized to int8 with a per-tensor
+scale; the quantization error is carried into the next step (error
+feedback), which keeps SGD/Adam convergence intact in practice.  Used by
+the shard_map data-parallel variant measured in EXPERIMENTS.md §Perf — the
+collective moves 4x fewer bytes than fp32 (2x vs bf16).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(g: jax.Array, err: jax.Array | None = None
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (q int8, scale fp32 scalar, new_err fp32)."""
+    g32 = g.astype(jnp.float32)
+    if err is not None:
+        g32 = g32 + err
+    scale = jnp.maximum(jnp.max(jnp.abs(g32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(g32 / scale), -127, 127).astype(jnp.int8)
+    deq = q.astype(jnp.float32) * scale
+    new_err = g32 - deq
+    return q, scale, new_err
+
+
+def decompress_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_tree(grads: Any, err_tree: Any | None = None):
+    leaves, td = jax.tree.flatten(grads)
+    errs = jax.tree.leaves(err_tree) if err_tree is not None else [None] * len(leaves)
+    qs, scales, new_errs = [], [], []
+    for g, e in zip(leaves, errs):
+        q, s, ne = compress_int8(g, e)
+        qs.append(q)
+        scales.append(s)
+        new_errs.append(ne)
+    return (jax.tree.unflatten(td, qs), jax.tree.unflatten(td, scales),
+            jax.tree.unflatten(td, new_errs))
+
+
+def decompress_tree(qs: Any, scales: Any):
+    return jax.tree.map(decompress_int8, qs, scales)

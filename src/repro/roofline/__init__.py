@@ -1,0 +1,8 @@
+from repro.roofline.analysis import (
+    RooflineReport,
+    analyze,
+    collective_bytes,
+    model_flops,
+)
+
+__all__ = ["RooflineReport", "analyze", "collective_bytes", "model_flops"]

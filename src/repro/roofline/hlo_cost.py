@@ -1,0 +1,313 @@
+"""Trip-count-aware HLO cost analysis.
+
+``compiled.cost_analysis()`` (XLA HloCostAnalysis) counts each while-loop
+*body once*, so scan-over-layers programs under-report FLOPs/bytes/
+collectives by ~the layer count.  This module parses the post-optimization
+HLO text (``compiled.as_text()``) into its computation call graph and
+rolls costs up bottom-up, multiplying while bodies by their trip counts
+(extracted from the loop-condition constants).
+
+Per-instruction costs:
+* ``dot``          — 2 · prod(result dims) · prod(contracting dims)
+* ``convolution``  — 2 · prod(result dims) · prod(kernel dims ÷ features)
+* ``fusion``/other — bytes = operand sizes + result size (HBM surface
+  traffic; internal fused ops don't touch HBM).  Dots *inside* fusion
+  computations still contribute FLOPs via the call roll-up.
+* collectives      — operand bytes, attributed by kind.
+
+All values are per-device (post-SPMD module); callers scale by chip count.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "token": 0, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# instruction: "  %name = <type(s)> opcode(...operands...), attrs"
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s+([\w\-]+)\((.*)\)(.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\(|\{)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Total bytes of a (possibly tuple) type string."""
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        nb = _DTYPE_BYTES.get(m.group(1))
+        if nb is None:
+            continue
+        n = 1
+        for d in m.group(2).split(","):
+            if d:
+                n *= int(d)
+        total += n * nb
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    result_type: str
+    opcode: str
+    operands: list[str]
+    attrs: str
+    raw: str
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0       # raw: every instruction's surface traffic
+    bytes_tpu: float = 0.0   # TPU-fusion-adjusted traffic (see analyze_hlo)
+    # traffic of score-dominated attention dots (the part a flash-attention
+    # kernel keeps resident in VMEM; see analyze_hlo docstring)
+    attn_score_bytes: float = 0.0
+    coll: dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+
+    def add(self, other: "Cost", mult: float = 1.0) -> None:
+        self.flops += other.flops * mult
+        self.bytes += other.bytes * mult
+        self.bytes_tpu += other.bytes_tpu * mult
+        self.attn_score_bytes += other.attn_score_bytes * mult
+        for k, v in other.coll.items():
+            self.coll[k] += v * mult
+
+    @property
+    def coll_total(self) -> float:
+        return sum(self.coll.values())
+
+
+_OPERAND_REF = re.compile(r"%([\w.\-]+)")
+_CALLED = re.compile(r"(?:to_apply|calls|body|condition|branch_computations)="
+                     r"[{]?%?([\w.\-]+(?:,\s*%?[\w.\-]+)*)[}]?")
+
+
+def parse_hlo(text: str) -> dict[str, list[Instr]]:
+    comps: dict[str, list[Instr]] = {}
+    cur: list[Instr] | None = None
+    for line in text.splitlines():
+        stripped = line.rstrip()
+        if not stripped:
+            continue
+        # computation start: "%name (...) -> ... {" or "ENTRY %name ..."
+        if (stripped.endswith("{") and ("->" in stripped or
+                                        stripped.startswith("ENTRY"))):
+            m = _COMP_RE.match(stripped.lstrip())
+            if m:
+                cur = comps.setdefault(m.group(1), [])
+            continue
+        if stripped.strip() == "}":
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(stripped)
+        if not m:
+            continue
+        name, rtype, opcode, operands, attrs = m.groups()
+        cur.append(Instr(name=name, result_type=rtype, opcode=opcode,
+                         operands=_OPERAND_REF.findall(operands),
+                         attrs=attrs + " " + operands, raw=stripped))
+    return comps
+
+
+def _dot_flops(instr: Instr, types: dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.result_type)
+    # contracting dims from lhs
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    lhs_type = types.get(instr.operands[0], "") if instr.operands else ""
+    sm = _SHAPE_RE.search(lhs_type)
+    if not (m and sm):
+        return 2.0 * out_elems  # fallback
+    dims = [int(x) for x in sm.group(2).split(",") if x]
+    k = 1
+    for ci in (int(x) for x in m.group(1).split(",") if x):
+        if ci < len(dims):
+            k *= dims[ci]
+    return 2.0 * out_elems * k
+
+
+def _conv_flops(instr: Instr, types: dict[str, str]) -> float:
+    out_elems = _shape_elems(instr.result_type)
+    k_type = types.get(instr.operands[1], "") if len(instr.operands) > 1 else ""
+    k_elems = _shape_elems(k_type)
+    sm = _SHAPE_RE.search(k_type)
+    if sm:
+        dims = [int(x) for x in sm.group(2).split(",") if x]
+        # output feature dim contributes to out_elems already
+        k_elems = max(1, k_elems // max(dims[-1], 1))
+    return 2.0 * out_elems * max(k_elems, 1)
+
+
+def _while_trips(cond_instrs: list[Instr]) -> int:
+    """Extract the loop bound from the condition computation: the constant
+    compared against the induction variable with direction=LT."""
+    consts: dict[str, int] = {}
+    for ins in cond_instrs:
+        if ins.opcode == "constant" and ins.result_type.startswith("s32"):
+            m = re.search(r"constant\((-?\d+)\)", ins.raw)
+            if m:
+                consts[ins.name] = int(m.group(1))
+    for ins in cond_instrs:
+        if ins.opcode == "compare" and "direction=LT" in ins.raw:
+            for op in ins.operands:
+                if op in consts:
+                    return max(consts[op], 1)
+    return 1
+
+
+_SURFACE_BYTES_OPS = {
+    "fusion", "copy", "transpose", "broadcast", "reshape", "bitcast",
+    "concatenate", "slice", "dynamic-slice", "dynamic-update-slice", "pad",
+    "reduce", "convert", "gather", "scatter", "iota", "reverse", "sort",
+    "select-and-scatter", "reduce-window", "dot", "convolution", "add",
+    "multiply", "subtract", "divide", "exponential", "rsqrt", "tanh",
+    "maximum", "minimum", "compare", "select", "log", "negate", "custom-call",
+}
+
+# ops whose surface traffic survives TPU fusion: matmuls, data movement
+# with nontrivial access patterns, reductions and loop stacking.  Pure
+# elementwise chains, converts, copies, broadcasts and layout ops fuse
+# into their producers/consumers on TPU and are excluded from bytes_tpu.
+_TPU_BYTES_OPS = {
+    "dot", "convolution", "gather", "scatter", "dynamic-slice",
+    "dynamic-update-slice", "concatenate", "sort", "reduce",
+    "reduce-window", "select-and-scatter", "custom-call",
+}
+# bytes_tpu of a fusion = Σ surfaces of marker instructions INSIDE its
+# computation (the fusion's own surface is the union of what its markers
+# stream; pure-elementwise fusions contribute nothing)
+_TPU_FUSION_MARKERS = _TPU_BYTES_OPS
+
+
+def analyze_hlo(text: str, entry: str | None = None) -> Cost:
+    comps = parse_hlo(text)
+    if not comps:
+        return Cost()
+    if entry is None:
+        m = re.search(r"ENTRY\s+%?([\w.\-]+)", text)
+        entry = m.group(1) if m else max(comps, key=lambda c: len(comps[c]))
+
+    memo: dict[str, Cost] = {}
+
+    def comp_cost(name: str, stack: tuple = ()) -> Cost:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps:
+            return Cost()
+        instrs = comps[name]
+        types = {i.name: i.result_type for i in instrs}
+        total = Cost()
+        for ins in instrs:
+            op = ins.opcode
+            if op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.raw)
+                mc = re.search(r"condition=%?([\w.\-]+)", ins.raw)
+                body = mb.group(1) if mb else None
+                cond = mc.group(1) if mc else None
+                # XLA records the static trip count in backend_config
+                mt = re.search(r'"known_trip_count":\s*\{"n":\s*"(\d+)"', ins.raw)
+                if mt:
+                    trips = int(mt.group(1))
+                else:
+                    trips = _while_trips(comps.get(cond, [])) if cond else 1
+                if body:
+                    total.add(comp_cost(body, stack + (name,)), trips)
+                continue
+            is_coll = None
+            for ck in _COLLECTIVES:
+                if op == ck or op == ck + "-start":
+                    is_coll = ck
+                    break
+            if is_coll:
+                nbytes = sum(_shape_bytes(types.get(o, "")) for o in ins.operands)
+                if nbytes == 0:
+                    nbytes = _shape_bytes(ins.result_type)
+                if is_coll == "all-reduce":
+                    # physically reduce-scatter + all-gather: 2× the wire
+                    # traffic of the one-directional collectives
+                    nbytes *= 2
+                total.coll[is_coll] += nbytes
+                total.bytes += nbytes
+                total.bytes_tpu += nbytes
+                continue
+            surface = (_shape_bytes(ins.result_type)
+                       + sum(_shape_bytes(types.get(o, ""))
+                             for o in ins.operands))
+            # in-place / sparse-access ops: traffic is the moved region,
+            # not the full buffer (XLA aliases DUS in place; gather reads
+            # only the gathered rows)
+            if op == "dynamic-update-slice" and len(ins.operands) > 1:
+                surface = 2 * _shape_bytes(types.get(ins.operands[1], ""))
+            elif op == "dynamic-slice":
+                surface = 2 * _shape_bytes(ins.result_type)
+            elif op == "gather":
+                surface = 2 * _shape_bytes(ins.result_type) + sum(
+                    _shape_bytes(types.get(o, "")) for o in ins.operands[1:])
+            elif op == "scatter" and len(ins.operands) > 2:
+                surface = (2 * _shape_bytes(types.get(ins.operands[2], ""))
+                           + _shape_bytes(types.get(ins.operands[1], "")))
+            if op == "dot":
+                total.flops += _dot_flops(ins, types)
+                total.bytes += surface
+                total.bytes_tpu += surface
+                # score-dominated attention dot: one tensor (the S×S score
+                # tile) carries ≥75% of the dot's surface.  A flash kernel
+                # keeps that tile in VMEM — bucket it for the adjusted
+                # memory term.
+                sizes = [_shape_bytes(ins.result_type)] + [
+                    _shape_bytes(types.get(o, "")) for o in ins.operands]
+                if sizes and max(sizes) >= 0.75 * sum(sizes):
+                    total.attn_score_bytes += max(sizes)
+                continue
+            if op == "convolution":
+                total.flops += _conv_flops(ins, types)
+                total.bytes += surface
+                total.bytes_tpu += surface
+                continue
+            if op in ("call", "conditional", "custom-call") or op == "fusion":
+                for group in _CALLED.findall(ins.attrs):
+                    for callee in re.split(r",\s*%?", group):
+                        sub = comp_cost(callee, stack + (name,))
+                        # fusion internals don't touch HBM for raw bytes
+                        # (surface counted below), but marker instructions
+                        # inside DO stream their operands: roll bytes_tpu up
+                        total.flops += sub.flops
+                        total.bytes_tpu += sub.bytes_tpu
+                        for k, v in sub.coll.items():
+                            total.coll[k] += v
+            if op in _SURFACE_BYTES_OPS:
+                total.bytes += surface
+                if op in _TPU_BYTES_OPS:
+                    total.bytes_tpu += surface
+                # elementwise-ish fusion flops: 1 flop per output element
+                if op == "fusion":
+                    total.flops += _shape_elems(ins.result_type)
+        memo[name] = total
+        return total
+
+    # reduce/sort/map also reference computations via to_apply; those are
+    # tiny scalar computations — the roll-up above handles them generically.
+    return comp_cost(entry)

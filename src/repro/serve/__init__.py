@@ -1,0 +1,3 @@
+from repro.serve.driver import Request, ServeReport, WrathServeDriver
+
+__all__ = ["WrathServeDriver", "Request", "ServeReport"]

@@ -1,0 +1,154 @@
+"""WRATH-supervised batched serving driver.
+
+Serving plane of the reproduction: requests are batched and decoded
+token-by-token on a pool of *replicas* (virtual serving hosts, an
+``engine.cluster`` pool).  WRATH supervises replica health exactly as it
+supervises tasks: a replica lost mid-decode (environment layer) is
+denylisted and the in-flight batch is retried on a healthy replica — the
+decode state is recovered from the last per-step state snapshot, so no
+generated tokens are lost (atomic-step semantics, the serving analog of
+the paper's atomic tasks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import MonitoringDatabase
+from repro.core.failures import FailureReport, HardwareShutdownError
+from repro.core.policy import ResiliencePolicyEngine
+from repro.engine.cluster import Cluster, Node, ResourcePool
+from repro.engine.retry_api import Action, SchedulingContext
+from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+from repro.models import cache_defs, decode_step, materialize, param_defs
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: list[int]
+    max_new_tokens: int = 8
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ServeReport:
+    completed: int
+    failed: int
+    tokens_generated: int
+    recoveries: list[dict]
+    denylisted: list[str]
+    wall_s: float
+
+    @property
+    def tokens_per_s(self) -> float:
+        return self.tokens_generated / max(self.wall_s, 1e-9)
+
+
+class WrathServeDriver:
+    def __init__(self, cfg: ModelConfig, *, n_replicas: int = 3,
+                 max_batch: int = 4, seed: int = 0):
+        self.cfg = cfg
+        self.max_batch = max_batch
+        nodes = [Node(f"replica{i}", workers_per_node=1)
+                 for i in range(n_replicas)]
+        self.cluster = Cluster([ResourcePool("serve", nodes)])
+        self.monitor = MonitoringDatabase()
+        self.policy = ResiliencePolicyEngine()
+        self.denylist: set[str] = set()
+        self.params = materialize(param_defs(cfg), jax.random.PRNGKey(seed))
+        self._decode = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg))
+
+    def _ctx(self) -> SchedulingContext:
+        return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
+                                 denylist=self.denylist, default_pool="serve")
+
+    def replicas(self) -> list[Node]:
+        return [n for n in self.cluster.pools["serve"].nodes
+                if n.healthy and n.name not in self.denylist]
+
+    # ------------------------------------------------------------------ #
+    def _decode_on(self, replica: Node, state: dict, batch: dict):
+        if not replica.healthy:
+            raise HardwareShutdownError(f"replica {replica.name} is down",
+                                        node=replica.name)
+        return self._decode(self.params, state, batch)
+
+    def serve(self, requests: list[Request], *,
+              kill_replica_at: tuple[str, int] | None = None) -> ServeReport:
+        """Process requests; optionally kill a replica after N decode steps."""
+        t0 = time.time()
+        recoveries: list[dict] = []
+        completed = failed = tokens = 0
+        decode_calls = 0
+        queue = list(requests)
+        while queue:
+            batch_reqs = queue[:self.max_batch]
+            queue = queue[len(batch_reqs):]
+            b = len(batch_reqs)
+            maxlen = max(len(r.prompt) for r in batch_reqs) + \
+                max(r.max_new_tokens for r in batch_reqs)
+            state = materialize(cache_defs(self.cfg, b, maxlen),
+                                jax.random.PRNGKey(0))
+            replica = self.replicas()[0]
+            # prefill: feed prompt tokens one by one (tiny models; a real
+            # deployment uses prefill_forward)
+            steps = max(len(r.prompt) for r in batch_reqs) + \
+                max(r.max_new_tokens for r in batch_reqs)
+            toks = np.zeros((b, 1), np.int32)
+            for i, r in enumerate(batch_reqs):
+                toks[i, 0] = r.prompt[0]
+            snapshot = jax.tree.map(lambda x: x, state)
+            t = 0
+            while t < steps - 1:
+                if kill_replica_at and decode_calls == kill_replica_at[1]:
+                    victim = self.cluster.find_node(kill_replica_at[0])
+                    if victim is not None:
+                        victim.shutdown_hardware()
+                try:
+                    logits, state = self._decode_on(
+                        replica, state, {"inputs": jnp.asarray(toks)})
+                    decode_calls += 1
+                except HardwareShutdownError as err:
+                    rec = new_task_record(
+                        TaskDef(lambda: None, "decode_batch",
+                                ResourceSpec(), 2), (), {}, default_retries=2)
+                    report = FailureReport.from_exception(
+                        err, task_id=rec.task_id, node=replica.name,
+                        pool="serve")
+                    decision = self.policy(rec, report, self._ctx())
+                    recoveries.append({
+                        "replica": replica.name, "step": t,
+                        "action": decision.action.value,
+                        "rung": decision.rung})
+                    if decision.action is Action.FAIL or not self.replicas():
+                        failed += b
+                        batch_reqs = []
+                        break
+                    replica = (self.cluster.find_node(decision.target_node)
+                               or self.replicas()[0])
+                    state = jax.tree.map(lambda x: x, snapshot)  # state recovery
+                    continue
+                snapshot = state
+                nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+                for i, r in enumerate(batch_reqs):
+                    t_next = t + 1
+                    if t_next < len(r.prompt):
+                        toks[i, 0] = r.prompt[t_next]       # teacher-forced prefill
+                    else:
+                        toks[i, 0] = int(nxt[i])
+                        if len(r.generated) < r.max_new_tokens:
+                            r.generated.append(int(nxt[i]))
+                            tokens += 1
+                t += 1
+            completed += len(batch_reqs)
+        return ServeReport(completed=completed, failed=failed,
+                           tokens_generated=tokens, recoveries=recoveries,
+                           denylisted=sorted(self.denylist),
+                           wall_s=time.time() - t0)

@@ -1,0 +1,7 @@
+from repro.train.supervisor import (
+    TrainEvent,
+    TrainReport,
+    WrathTrainSupervisor,
+)
+
+__all__ = ["WrathTrainSupervisor", "TrainEvent", "TrainReport"]

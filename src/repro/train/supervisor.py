@@ -1,0 +1,319 @@
+"""WRATH-supervised training loop (the paper's technique on the training
+plane — DESIGN.md §2).
+
+Training is executed as a task hierarchy: each step fans out per-host
+*gradient-shard tasks* over a set of virtual hosts (an
+``repro.engine.cluster.Cluster`` pool, so heterogeneous memory/health/speed
+and the WRATH machinery come for free).  Failures raised while computing a
+shard flow through the SAME :class:`ResiliencePolicyEngine` as the task
+plane:
+
+* host loss (``HardwareShutdownError``)  → denylist + hierarchical retry
+  of the lost shard on another host; subsequent steps re-mesh elastically
+  (the global batch is re-split over the surviving hosts);
+* resource starvation (shard too big for the host) → feasibility-aware
+  placement onto a big-memory host (retry ladder rung 1/4);
+* NaN/Inf loss (``NumericalDivergenceError``, application layer) →
+  restore the last committed checkpoint and continue with a perturbed
+  data order (retriable-in-place, like the paper's Random Seed Errors);
+* stragglers → speculative re-execution of the slow shard on the fastest
+  healthy host (history-informed placement, §V-B rung 3).
+
+All recovery decisions are recorded; ``TrainReport`` summarizes recovery
+counts, checkpoint restores, and the loss trace (tests assert the loss
+still goes down through failures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.core import MonitoringDatabase
+from repro.core.failures import (
+    FailureReport,
+    HardwareShutdownError,
+    NumericalDivergenceError,
+)
+from repro.core.policy import ResiliencePolicyEngine
+from repro.data import batch_for
+from repro.engine.cluster import Cluster, Node, ResourcePool
+from repro.engine.retry_api import Action, SchedulingContext
+from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+from repro.models import loss_fn, materialize, param_defs
+from repro.models.config import ModelConfig
+from repro.optim import OptConfig, adamw_apply, init_opt_state
+
+
+@dataclasses.dataclass
+class TrainEvent:
+    """Injected failure for a given step (training-plane fail engine)."""
+
+    step: int
+    kind: str                  # host_down | host_up | nan | straggler
+    host: str | None = None
+    factor: float = 5.0        # straggler slowdown
+
+
+@dataclasses.dataclass
+class TrainReport:
+    steps_completed: int
+    losses: list[float]
+    recoveries: list[dict]
+    restores: int
+    denylisted: list[str]
+    speculations: int
+    final_hosts: int
+
+    @property
+    def recovered_all(self) -> bool:
+        return all(r["action"] != "fail" for r in self.recoveries)
+
+
+class WrathTrainSupervisor:
+    def __init__(
+        self,
+        cfg: ModelConfig,
+        opt_cfg: OptConfig,
+        *,
+        n_hosts: int = 4,
+        big_host: bool = True,
+        host_memory_gb: float = 16.0,
+        global_batch: int = 8,
+        seq_len: int = 64,
+        ckpt_dir: str = "/tmp/wrath_ckpt",
+        ckpt_every: int = 10,
+        shard_memory_gb: float = 1.0,
+        data_seed: int = 0,
+        straggler_factor: float = 3.0,
+    ):
+        self.cfg = cfg
+        self.opt_cfg = opt_cfg
+        self.global_batch = global_batch
+        self.seq_len = seq_len
+        self.data_seed = data_seed
+        self.shard_memory_gb = shard_memory_gb
+        self.straggler_factor = straggler_factor
+
+        nodes = [Node(f"host{i:02d}", memory_gb=host_memory_gb,
+                      workers_per_node=1) for i in range(n_hosts)]
+        if big_host:
+            nodes.append(Node("bighost", memory_gb=host_memory_gb * 32,
+                              workers_per_node=1))
+        self.cluster = Cluster([ResourcePool("pod0", nodes)])
+        self.monitor = MonitoringDatabase()
+        self.policy = ResiliencePolicyEngine()
+        self.denylist: set[str] = set()
+        self.ckpt = CheckpointManager(ckpt_dir, keep=2, async_save=False)
+        self.ckpt_every = ckpt_every
+
+        self._grad_fn = jax.jit(
+            jax.value_and_grad(
+                lambda p, b: loss_fn(p, b, cfg, remat=False)[0]))
+        self._host_times: dict[str, float] = {}
+        self._slow_counts: dict[str, int] = {}
+
+    # ------------------------------------------------------------------ #
+    def _ctx(self) -> SchedulingContext:
+        return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
+                                 denylist=self.denylist, default_pool="pod0")
+
+    def healthy_hosts(self) -> list[Node]:
+        return [n for n in self.cluster.pools["pod0"].nodes
+                if n.healthy and n.name not in self.denylist
+                and n.name != "bighost"]
+
+    # ------------------------------------------------------------------ #
+    def _shard_task(self, step: int, host: Node, params, batch,
+                    injected_nan: bool):
+        """Compute one host's gradient shard (real JAX compute), raising
+        the failures a real host would raise."""
+        if not host.healthy:
+            raise HardwareShutdownError(f"host {host.name} is down",
+                                        node=host.name)
+        if self.shard_memory_gb > host.memory_gb:
+            raise MemoryError(
+                f"cannot allocate {self.shard_memory_gb}GB on {host.name} "
+                f"(capacity {host.memory_gb}GB)")
+        if host.speed < 1.0:
+            time.sleep(min(0.05 / host.speed, 0.5))  # simulated straggle
+        loss, grads = self._grad_fn(params, batch)
+        if injected_nan:
+            loss = loss * jnp.nan
+            grads = jax.tree.map(lambda g: g * jnp.nan, grads)
+        if not bool(jnp.isfinite(loss)):
+            raise NumericalDivergenceError(
+                f"loss is NaN/Inf at step {step}", node=host.name)
+        return float(loss), grads
+
+    def _profile(self, host: Node) -> dict[str, float]:
+        return {"node_memory_gb": host.memory_gb,
+                "node_mem_in_use_gb": host.mem_in_use_gb,
+                "node_healthy": float(host.healthy)}
+
+    # ------------------------------------------------------------------ #
+    def run(self, steps: int, *, events: list[TrainEvent] | None = None,
+            start_params=None) -> TrainReport:
+        events = events or []
+        by_step: dict[int, list[TrainEvent]] = {}
+        for e in events:
+            by_step.setdefault(e.step, []).append(e)
+
+        key = jax.random.PRNGKey(self.data_seed)
+        params = start_params if start_params is not None \
+            else materialize(param_defs(self.cfg), key)
+        opt_state = init_opt_state(params, self.opt_cfg)
+        step0 = 0
+        restored = self.ckpt.restore_latest({"params": params, "opt": opt_state})
+        if restored is not None:
+            tree, meta = restored
+            params, opt_state = tree["params"], tree["opt"]
+            step0 = int(meta["step"]) + 1
+
+        losses: list[float] = []
+        recoveries: list[dict] = []
+        restores = 0
+        speculations = 0
+        data_jitter = 0
+        step = step0
+        while step < steps:
+            # -- injected environment events (one-shot: a rewound run must
+            # not re-trigger the same injected fault) ----------------------
+            step_events = by_step.pop(step, [])
+            for ev in step_events:
+                node = self.cluster.find_node(ev.host) if ev.host else None
+                if ev.kind == "host_down" and node:
+                    node.shutdown_hardware()
+                elif ev.kind == "host_up" and node:
+                    node.restore_hardware()
+                    self.denylist.discard(node.name)
+                elif ev.kind == "straggler" and node:
+                    node.speed = 1.0 / ev.factor
+
+            inject_nan = any(e.kind == "nan" for e in step_events)
+
+            hosts = self.healthy_hosts() or [self.cluster.find_node("bighost")]
+            batch = batch_for(self.cfg, self.global_batch, self.seq_len,
+                              step + data_jitter, seed=self.data_seed)
+            shards = np.array_split(np.arange(self.global_batch), len(hosts))
+
+            grads_acc = None
+            loss_acc = 0.0
+            nshards = 0
+            restart_step = False
+            for host, idx in zip(hosts, shards):
+                if len(idx) == 0:
+                    continue
+                sub = {k: v[idx] for k, v in batch.items()}
+                attempt_host: Node | None = host
+                rec = new_task_record(
+                    TaskDef(lambda: None, "grad_shard",
+                            ResourceSpec(memory_gb=self.shard_memory_gb), 2),
+                    (), {}, default_retries=2)
+                while attempt_host is not None:
+                    t0 = time.perf_counter()
+                    try:
+                        loss, grads = self._shard_task(
+                            step, attempt_host, params, sub,
+                            inject_nan and nshards == 0)
+                        dt = time.perf_counter() - t0
+                        self.monitor.record_task_placement(
+                            "grad_shard", attempt_host.name, "pod0", ok=True)
+                        # straggler detection: EMA of shard times
+                        ema = self._host_times.get(attempt_host.name, dt)
+                        self._host_times[attempt_host.name] = 0.7 * ema + 0.3 * dt
+                        median = float(np.median(list(self._host_times.values())))
+                        if dt > self.straggler_factor * max(median, 1e-4) \
+                                and len(hosts) > 1:
+                            # rung-3 style: speculatively redo on the
+                            # historically fastest host
+                            fastest = min(
+                                (h for h in hosts if h.name != attempt_host.name),
+                                key=lambda h: self._host_times.get(h.name, 1e9))
+                            loss, grads = self._shard_task(
+                                step, fastest, params, sub, False)
+                            speculations += 1
+                            n_slow = self._slow_counts.get(attempt_host.name, 0) + 1
+                            self._slow_counts[attempt_host.name] = n_slow
+                            if n_slow >= 3:
+                                # chronic straggler: denylist the host (it
+                                # resumes via the heartbeat-resume rule once
+                                # its speed recovers)
+                                self.denylist.add(attempt_host.name)
+                                self.monitor.record_system_event(
+                                    "denylist_add", node=attempt_host.name,
+                                    cause="chronic_straggler")
+                        break
+                    except Exception as err:  # noqa: BLE001
+                        rec.record_attempt(
+                            node=attempt_host.name, pool="pod0", worker="-",
+                            ok=False, error=type(err).__name__,
+                            duration=time.perf_counter() - t0)
+                        report = FailureReport.from_exception(
+                            err, task_id=rec.task_id, node=attempt_host.name,
+                            pool="pod0",
+                            resource_profile=self._profile(attempt_host),
+                            requirements=rec.resources.asdict(),
+                            retry_count=rec.retry_count)
+                        self.monitor.record_task_placement(
+                            "grad_shard", attempt_host.name, "pod0", ok=False)
+                        decision = self.policy(rec, report, self._ctx())
+                        recoveries.append({
+                            "step": step, "error": type(err).__name__,
+                            "host": attempt_host.name,
+                            "action": decision.action.value,
+                            "rung": decision.rung, "reason": decision.reason})
+                        if isinstance(err, NumericalDivergenceError):
+                            # application-layer divergence: restore last
+                            # checkpoint, perturb the data order, re-run
+                            restart_step = True
+                            break
+                        if decision.action in (Action.RETRY,
+                                               Action.RESTART_AND_RETRY):
+                            rec.retry_count += 1
+                            attempt_host = (self.cluster.find_node(
+                                decision.target_node)
+                                if decision.target_node else None)
+                        else:
+                            attempt_host = None
+                if restart_step:
+                    break
+                if attempt_host is None:
+                    raise RuntimeError(
+                        f"shard for step {step} unrecoverable; aborting run")
+                loss_acc += loss * len(idx)
+                grads = jax.tree.map(
+                    lambda g: g.astype(jnp.float32) * (len(idx) / self.global_batch),
+                    grads)
+                grads_acc = grads if grads_acc is None else jax.tree.map(
+                    jnp.add, grads_acc, grads)
+                nshards += 1
+
+            if restart_step:
+                restored = self.ckpt.restore_latest(
+                    {"params": params, "opt": opt_state})
+                restores += 1
+                data_jitter += 1          # perturb data order (reseed)
+                if restored is not None:
+                    tree, meta = restored
+                    params, opt_state = tree["params"], tree["opt"]
+                    step = int(meta["step"]) + 1
+                continue
+
+            params, opt_state, _ = adamw_apply(params, grads_acc, opt_state,
+                                               self.opt_cfg)
+            losses.append(loss_acc / self.global_batch)
+            if step % self.ckpt_every == 0:
+                self.ckpt.save(step, {"params": params, "opt": opt_state})
+            step += 1
+
+        self.ckpt.save(steps - 1, {"params": params, "opt": opt_state})
+        return TrainReport(
+            steps_completed=len(losses), losses=losses, recoveries=recoveries,
+            restores=restores, denylisted=sorted(self.denylist),
+            speculations=speculations, final_hosts=len(self.healthy_hosts()))

@@ -1,0 +1,83 @@
+"""Checkpoint store: atomic commit, bf16 round-trip, retention, resume."""
+import threading
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointManager, load_checkpoint, save_checkpoint
+
+
+@pytest.fixture()
+def tree():
+    return {
+        "params": {"w": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+                   "b": jnp.ones((4,), jnp.bfloat16) * 1.5},
+        "opt": {"m": jnp.zeros((3, 4), jnp.bfloat16),
+                "count": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_roundtrip_with_bf16(tmp_path, tree):
+    save_checkpoint(tmp_path, 5, tree, metadata={"note": "x"})
+    loaded, meta = load_checkpoint(tmp_path / "step_00000005", tree)
+    assert meta["step"] == 5 and meta["note"] == "x"
+    for a, b in zip(jax.tree.leaves(tree), jax.tree.leaves(loaded)):
+        assert a.dtype == b.dtype
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_uncommitted_checkpoint_ignored(tmp_path, tree):
+    d = save_checkpoint(tmp_path, 1, tree)
+    (d / "COMMITTED").unlink()
+    mgr = CheckpointManager(tmp_path)
+    assert mgr.steps() == []
+    assert mgr.restore_latest(tree) is None
+
+
+def test_retention_keeps_last_k(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path, keep=2)
+    for s in (1, 2, 3, 4):
+        mgr.save(s, tree)
+    assert mgr.steps() == [3, 4]
+
+
+def test_restore_latest_picks_newest(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path, keep=3)
+    for s in (1, 5, 9):
+        t2 = dict(tree)
+        t2["params"] = {"w": tree["params"]["w"] * s, "b": tree["params"]["b"]}
+        mgr.save(s, t2)
+    loaded, meta = mgr.restore_latest(tree)
+    assert meta["step"] == 9
+    np.testing.assert_allclose(np.asarray(loaded["params"]["w"]),
+                               np.asarray(tree["params"]["w"]) * 9)
+
+
+def test_async_save_completes(tmp_path, tree):
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    mgr.save(1, tree)
+    mgr.wait()
+    assert mgr.steps() == [1]
+
+
+def test_overwrite_same_step(tmp_path, tree):
+    save_checkpoint(tmp_path, 3, tree)
+    t2 = {"params": {"w": tree["params"]["w"] + 1, "b": tree["params"]["b"]},
+          "opt": tree["opt"]}
+    save_checkpoint(tmp_path, 3, t2)
+    loaded, _ = load_checkpoint(tmp_path / "step_00000003", tree)
+    np.testing.assert_allclose(np.asarray(loaded["params"]["w"]),
+                               np.asarray(tree["params"]["w"]) + 1)
+
+
+def test_large_tree_multi_shard(tmp_path):
+    tree = {f"w{i}": jnp.ones((256, 256), jnp.float32) * i for i in range(8)}
+    save_checkpoint(tmp_path, 1, tree, shard_mb=1)  # force several shards
+    files = list((tmp_path / "step_00000001").glob("shard_*.npz"))
+    assert len(files) > 1
+    loaded, _ = load_checkpoint(tmp_path / "step_00000001", tree)
+    for k in tree:
+        np.testing.assert_array_equal(np.asarray(loaded[k]), np.asarray(tree[k]))

@@ -1,0 +1,169 @@
+"""Sharding rules, optimizer, compression, data pipeline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed.sharding import (
+    ACT_RULES,
+    CACHE_RULES,
+    PARAM_RULES,
+    defs_pspecs,
+    spec_for,
+)
+from repro.models import param_defs
+from repro.optim import OptConfig, adamw_apply, init_opt_state, lr_at
+from repro.optim.compress import compress_int8, decompress_int8
+
+
+@pytest.fixture(scope="module")
+def mesh2d():
+    from repro.launch.mesh import _auto
+    # 1 real device is fine: mesh construction only needs shape (1,1) —
+    # use abstract mesh via jax.sharding.Mesh over the single device
+    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+
+
+class FakeMesh:
+    """Shape-only mesh stand-in for rule testing."""
+
+    def __init__(self, sizes: dict[str, int]):
+        self.axis_names = tuple(sizes)
+        import numpy as _np
+
+        self.devices = _np.empty(tuple(sizes.values()), dtype=object)
+
+
+def test_spec_for_basic_param():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = spec_for((4096, 8192), ("d_model", "d_ff"), PARAM_RULES, mesh)
+    assert spec == P("data", "model")
+
+
+def test_spec_for_divisibility_fallback():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # 10 not divisible by 16 -> dim unsharded
+    spec = spec_for((10, 8192), ("d_model", "d_ff"), PARAM_RULES, mesh)
+    assert spec == P(None, "model")
+
+
+def test_spec_for_no_axis_reuse():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    # both dims want 'model': second one must not reuse it
+    spec = spec_for((256, 256), ("heads", "d_ff"), PARAM_RULES, mesh)
+    assert spec == P("model")  # trailing None dropped
+
+
+def test_spec_for_multi_pod_fsdp():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    spec = spec_for((4096, 8192), ("d_model", "d_ff"), PARAM_RULES, mesh)
+    assert spec == P(("pod", "data"), "model")
+
+
+def test_spec_for_pod_fallback_when_odd():
+    mesh = FakeMesh({"pod": 2, "data": 16, "model": 16})
+    # 17 not divisible by 32 nor 16 -> unsharded
+    spec = spec_for((17, 8192), ("d_model", "d_ff"), PARAM_RULES, mesh)
+    assert spec == P(None, "model")
+
+
+def test_cache_rules_shard_seq_over_model():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    spec = spec_for((1, 524288, 16, 128), ("batch", "seq", "kv_heads", None),
+                    CACHE_RULES, mesh)
+    assert spec == P(None, "model")  # batch=1 unshardable; seq over model
+
+
+def test_param_pspecs_cover_all_archs():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    from repro.configs import ARCH_IDS, get_config
+
+    for arch in ARCH_IDS:
+        defs = param_defs(get_config(arch))
+        specs = defs_pspecs(defs, PARAM_RULES, mesh)
+        leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert leaves, arch
+        # at least half the tensors shard on 'model' (TP actually engaged)
+        with_model = sum(1 for s in leaves if "model" in str(s))
+        assert with_model > 0, arch
+
+
+# ------------------------------------------------------------- optimizer --
+def test_adamw_converges_on_quadratic():
+    cfg = OptConfig(lr=0.1, warmup_steps=0, total_steps=200,
+                    weight_decay=0.0, clip_norm=0.0)
+    params = {"x": jnp.array([5.0, -3.0])}
+    state = init_opt_state(params, cfg)
+    for _ in range(150):
+        grads = {"x": 2 * params["x"]}
+        params, state, _ = adamw_apply(params, grads, state, cfg)
+    assert float(jnp.abs(params["x"]).max()) < 0.1
+
+
+def test_lr_schedule_warmup_and_decay():
+    cfg = OptConfig(lr=1e-3, warmup_steps=10, total_steps=100, min_lr_ratio=0.1)
+    assert float(lr_at(jnp.asarray(0), cfg)) == 0.0
+    assert float(lr_at(jnp.asarray(10), cfg)) == pytest.approx(1e-3, rel=1e-3)
+    assert float(lr_at(jnp.asarray(100), cfg)) == pytest.approx(1e-4, rel=1e-2)
+
+
+def test_adamw_moment_dtype_bf16():
+    cfg = OptConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((4, 4))}
+    state = init_opt_state(params, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+    params, state, _ = adamw_apply(params, {"w": jnp.ones((4, 4))}, state, cfg)
+    assert state["m"]["w"].dtype == jnp.bfloat16
+
+
+def test_grad_clipping_bounds_update():
+    cfg = OptConfig(lr=1.0, warmup_steps=0, clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((2,))}
+    state = init_opt_state(params, cfg)
+    _, _, m = adamw_apply(params, {"w": jnp.array([1e6, 1e6])}, state, cfg)
+    assert float(m["grad_norm"]) > 1e5  # raw norm reported
+
+
+# ----------------------------------------------------------- compression --
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 1000))
+def test_int8_compression_error_feedback(seed):
+    g = jax.random.normal(jax.random.PRNGKey(seed), (64,)) * 0.1
+    q, scale, err = compress_int8(g)
+    deq = decompress_int8(q, scale)
+    # quantization error bounded by scale/2 per element
+    assert float(jnp.max(jnp.abs(deq - g))) <= float(scale) * 0.5 + 1e-9
+    # with error feedback the LONG-RUN average is unbiased: feeding the
+    # same gradient with carried error converges to the true value
+    acc = jnp.zeros_like(g)
+    e = None
+    for _ in range(32):
+        q, s, e = compress_int8(g, e)
+        acc = acc + decompress_int8(q, s)
+    np.testing.assert_allclose(np.asarray(acc / 32), np.asarray(g),
+                               atol=float(s) * 0.6)
+
+
+# ------------------------------------------------------------------ data --
+def test_data_pipeline_restart_determinism():
+    from repro.data import SyntheticTokens
+
+    a = SyntheticTokens(1000, 4, 32, seed=3)
+    b = SyntheticTokens(1000, 4, 32, seed=3)
+    for step in (0, 7, 100):
+        xa, xb = a.batch_at(step), b.batch_at(step)
+        np.testing.assert_array_equal(xa["inputs"], xb["inputs"])
+        np.testing.assert_array_equal(xa["targets"], xb["targets"])
+
+
+def test_data_pipeline_is_learnable():
+    from repro.data import SyntheticTokens
+
+    p = SyntheticTokens(50, 8, 64, seed=0, noise=0.1)
+    batch = p.batch_at(0)
+    # next token equals perm[current] ~90% of the time
+    nxt = p.perm[batch["inputs"]]
+    agree = (nxt == batch["targets"]).mean()
+    assert agree > 0.8

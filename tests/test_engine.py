@@ -1,0 +1,237 @@
+"""TBPP engine behaviour: DAG execution, resource enforcement, monitoring."""
+import time
+
+import pytest
+
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core.failures import EnvironmentMismatchError, UlimitExceededError
+from repro.core.monitoring import TCPRadio, TCPRadioServer, SystemMonitoringAgent
+from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+
+
+@pytest.fixture()
+def mon():
+    return MonitoringDatabase()
+
+
+def test_dag_diamond():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        @task
+        def f(x):
+            return x + 1
+
+        @task
+        def g(a, b):
+            return a * b
+
+        a = f(1)          # 2
+        b = f(a)          # 3
+        c = f(a)          # 3
+        d = g(b, c)       # 9
+        assert d.result(timeout=10) == 9
+
+
+def test_nested_future_args():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        @task
+        def one():
+            return 1
+
+        @task
+        def total(xs, named=None):
+            return sum(xs) + sum(named.values())
+
+        futs = [one() for _ in range(4)]
+        t = total(futs[:2], named={"a": futs[2], "b": futs[3]})
+        assert t.result(timeout=10) == 4
+
+
+def test_multiparent_task_executes_exactly_once():
+    """Regression: racing parent-completion callbacks must not double-run."""
+    import threading
+    counter = {"n": 0}
+    lock = threading.Lock()
+
+    with DataFlowKernel(Cluster.homogeneous(4)) as dfk:
+        @task
+        def src(i):
+            return i
+
+        @task
+        def join(xs):
+            with lock:
+                counter["n"] += 1
+            return sum(xs)
+
+        for _ in range(10):
+            parents = [src(i) for i in range(8)]
+            j = join(parents)
+            assert j.result(timeout=10) == 28
+    assert counter["n"] == 10
+
+
+def test_memory_capacity_enforced_baseline_fails():
+    cluster = Cluster.homogeneous(2, memory_gb=8)
+    with DataFlowKernel(cluster, default_retries=1) as dfk:
+        @task(memory_gb=100)
+        def big():
+            return 1
+
+        with pytest.raises(MemoryError):
+            big().result(timeout=10)
+        assert dfk.stats["retries"] == 1  # baseline burned its retry
+
+
+def test_package_mismatch_raises_env_error():
+    cluster = Cluster.homogeneous(1)
+    with DataFlowKernel(cluster, default_retries=0) as dfk:
+        @task(packages=("nonexistent_pkg",))
+        def needs():
+            return 1
+
+        with pytest.raises(EnvironmentMismatchError):
+            needs().result(timeout=10)
+
+
+def test_ulimit_enforced():
+    cluster = Cluster([ResourcePool("p", [Node("n0", ulimit_files=100)])])
+    with DataFlowKernel(cluster, default_retries=0) as dfk:
+        @task(open_files=1_000_000)
+        def files():
+            return 1
+
+        with pytest.raises(UlimitExceededError):
+            files().result(timeout=10)
+
+
+def test_transient_contention_retry_succeeds(mon):
+    """Two 6 GB tasks on one 8 GB node: the loser backs off and succeeds."""
+    cluster = Cluster.homogeneous(1, memory_gb=8, workers_per_node=2)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        default_retries=6) as dfk:
+        @task(memory_gb=6)
+        def hold(t):
+            time.sleep(t)
+            return t
+
+        futs = [hold(0.2), hold(0.2)]
+        assert [f.result(timeout=15) for f in futs] == [0.2, 0.2]
+        assert dfk.stats["retries"] >= 1  # the loser was retried with backoff
+
+
+def test_heartbeats_flow_to_monitor(mon):
+    cluster = Cluster.homogeneous(2)
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        time.sleep(0.25)
+        beats = mon.last_heartbeats()
+    assert len(beats) == 2
+    assert all(time.time() - t < 5 for t in beats.values())
+
+
+def test_hardware_shutdown_detected_and_rerouted(mon):
+    """Kill a node mid-run: heartbeat loss reroutes its tasks (WRATH)."""
+    cluster = Cluster.homogeneous(3, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        default_retries=3, heartbeat_period=0.03,
+                        heartbeat_threshold=3) as dfk:
+        @task
+        def slow(x):
+            time.sleep(0.3)
+            return x
+
+        futs = [slow(i) for i in range(3)]
+        time.sleep(0.05)
+        victim = cluster.all_nodes()[0]
+        victim.shutdown_hardware()
+        results = sorted(f.result(timeout=30) for f in futs)
+        assert results == [0, 1, 2]
+    events = [e["event"] for e in mon.system_events]
+    assert "heartbeat_lost" in events or "denylist_add" in events
+
+
+def test_worker_killed_respawns():
+    from repro.engine.cluster import kill_current_worker
+    cluster = Cluster.homogeneous(2, workers_per_node=1)
+    mon = MonitoringDatabase()
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        default_retries=2) as dfk:
+        killed = {"done": False}
+
+        @task
+        def murder():
+            if not killed["done"]:
+                killed["done"] = True
+                kill_current_worker()
+            return "survived"
+
+        assert murder().result(timeout=15) == "survived"
+        # node managers respawn killed workers
+        time.sleep(0.2)
+        for node in cluster.all_nodes():
+            assert sum(1 for w in node.workers if w.alive) >= 1
+
+
+def test_speculative_execution_beats_straggler():
+    nodes = [Node("fast", speed=1.0, workers_per_node=1),
+             Node("slug", speed=0.02, workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    mon = MonitoringDatabase()
+    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
+                        straggler_factor=2.0, heartbeat_period=0.03) as dfk:
+        from repro.engine.cluster import simwork
+
+        @task(est_duration_s=0.1)
+        def work(x):
+            simwork(0.1)
+            return x
+
+        # keep "fast" busy briefly so one task lands on the straggler
+        futs = [work(i) for i in range(2)]
+        t0 = time.time()
+        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
+        elapsed = time.time() - t0
+        # without speculation the straggler task would take ~5s (0.1/0.02)
+        assert elapsed < 4.0
+    assert dfk.stats["speculations"] >= 1
+
+
+def test_tcp_radio_roundtrip(mon):
+    server = TCPRadioServer(mon).start()
+    try:
+        radio = TCPRadio(server.address)
+        radio.send({"kind": "heartbeat", "node": "tcp-node", "time": time.time()})
+        radio.send({"kind": "task_event", "task_id": "t1", "event": "submitted",
+                    "data": {"name": "x"}})
+        deadline = time.time() + 5
+        while time.time() < deadline and "tcp-node" not in mon.last_heartbeats():
+            time.sleep(0.01)
+        assert "tcp-node" in mon.last_heartbeats()
+        assert mon.events_for("t1")
+        radio.close()
+    finally:
+        server.stop()
+
+
+def test_system_monitoring_agent_heartbeats(mon):
+    from repro.core.monitoring import InProcRadio
+    agent = SystemMonitoringAgent("comp-x", InProcRadio(mon), period=0.02).start()
+    time.sleep(0.1)
+    agent.stop()
+    assert "comp-x" in mon.last_heartbeats()
+
+
+def test_placement_history(mon):
+    cluster = Cluster.homogeneous(2)
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        @task
+        def ok():
+            return 1
+
+        for _ in range(6):
+            ok().result(timeout=10)
+    hist = mon.node_history("ok")
+    assert sum(s.successes for s in hist.values()) == 6
+    assert mon.best_historical_node("ok") is not None

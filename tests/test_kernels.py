@@ -1,0 +1,136 @@
+"""Pallas kernel validation: shape/dtype sweeps vs pure-jnp oracles
+(interpret mode executes the kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import flash_attention, ssd_scan
+from repro.kernels.ref import attention_ref, ssd_ref
+
+KEY = jax.random.PRNGKey(7)
+
+
+def _qkv(b, s, h, kv, d, dtype):
+    q = jax.random.normal(KEY, (b, s, h, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (b, s, kv, d),
+                          jnp.float32).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, kv, d),
+                          jnp.float32).astype(dtype)
+    return q, k, v
+
+
+def _ref(q, k, v, **kw):
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:
+        k = jnp.repeat(k, h // kv, 2)
+        v = jnp.repeat(v, h // kv, 2)
+    out = attention_ref(q.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+                        k.transpose(0, 2, 1, 3).reshape(b * h, s, d),
+                        v.transpose(0, 2, 1, 3).reshape(b * h, s, d), **kw)
+    return out.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("s", [128, 256, 512])
+@pytest.mark.parametrize("d", [64, 128])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-4), (jnp.bfloat16, 2e-2)])
+def test_flash_attention_shapes_dtypes(s, d, dtype, tol):
+    q, k, v = _qkv(1, s, 2, 2, d, dtype)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = _ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("window", [32, 64, 128])
+def test_flash_attention_sliding_window(window):
+    q, k, v = _qkv(2, 256, 2, 1, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=window, interpret=True)
+    ref = _ref(q, k, v, causal=True, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_gqa_grouping():
+    q, k, v = _qkv(2, 128, 8, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = _ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_noncausal():
+    q, k, v = _qkv(1, 128, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, interpret=True)
+    ref = _ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_block_size_invariance():
+    q, k, v = _qkv(1, 512, 2, 2, 64, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, q_block=128, kv_block=128,
+                        interpret=True)
+    b = flash_attention(q, k, v, causal=True, q_block=256, kv_block=64,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5, atol=1e-5)
+
+
+def test_flash_matches_model_layer_path():
+    """Kernel agrees with the model's blockwise_mha (the pjit path)."""
+    from repro.models.layers import blockwise_mha
+    q, k, v = _qkv(2, 256, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = blockwise_mha(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- SSD ----
+@pytest.mark.parametrize("l,chunk", [(128, 32), (256, 64), (256, 128)])
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-3), (jnp.bfloat16, 5e-2)])
+def test_ssd_scan_shapes_dtypes(l, chunk, dtype, tol):
+    b, h, p, n = 2, 2, 16, 32
+    x = jax.random.normal(KEY, (b, l, h, p), jnp.float32).astype(dtype)
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                           (b, l, h))).astype(dtype)
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, l, n)).astype(dtype)
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, l, n)).astype(dtype)
+    y, st = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, sr = ssd_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32), rtol=tol, atol=tol)
+    np.testing.assert_allclose(np.asarray(st, np.float32),
+                               np.asarray(sr, np.float32), rtol=tol, atol=tol)
+
+
+def test_ssd_kernel_matches_model_ssd_scan():
+    """Kernel agrees with the model's chunked ssd_scan (the pjit path)."""
+    from repro.models.ssm import ssd_scan as model_ssd
+    b, l, h, p, n = 1, 128, 2, 8, 16
+    x = jax.random.normal(KEY, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3), (b, l, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, l, 1, n))
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, l, 1, n))
+    y_k, s_k = ssd_scan(x, dt, a, bm, cm, chunk=32, interpret=True)
+    y_m, s_m = model_ssd(x, dt, a, bm, cm, chunk=32)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m),
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_m),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_ssd_chunk_invariance():
+    b, l, h, p, n = 1, 256, 1, 8, 16
+    x = jax.random.normal(KEY, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3), (b, l, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, l, n))
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, l, n))
+    y1, s1 = ssd_scan(x, dt, a, bm, cm, chunk=32, interpret=True)
+    y2, s2 = ssd_scan(x, dt, a, bm, cm, chunk=128, interpret=True)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(np.asarray(s1), np.asarray(s2), rtol=1e-3, atol=1e-3)

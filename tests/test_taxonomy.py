@@ -1,0 +1,124 @@
+"""Failure Taxonomy Library tests (paper Table I coverage)."""
+import pytest
+
+from repro.core.failures import (
+    DependencyError,
+    EnvironmentMismatchError,
+    HardwareShutdownError,
+    Layer,
+    PilotJobInitError,
+    RandomSeedError,
+    ResourceStarvationError,
+    Retriable,
+    UlimitExceededError,
+    WorkerLostError,
+)
+from repro.core.taxonomy import (
+    TABLE_I,
+    FailureTaxonomyLibrary,
+    TaxonomyEntry,
+)
+from repro.core.failures import DetectionStrategy
+
+
+@pytest.fixture()
+def ftl():
+    return FailureTaxonomyLibrary()
+
+
+# ---------------------------------------------------------------- Table I --
+def test_table1_has_all_four_layers():
+    layers = {e.layer for e in TABLE_I.values()}
+    assert layers == set(Layer)
+
+
+@pytest.mark.parametrize("ftype,layer,retriable", [
+    ("syntax_error", Layer.APPLICATION, Retriable.NO),
+    ("logic_error", Layer.APPLICATION, Retriable.NO),
+    ("random_seed_error", Layer.APPLICATION, Retriable.YES),
+    ("monitor_loss", Layer.FRAMEWORK, Retriable.YES),
+    ("manager_loss", Layer.FRAMEWORK, Retriable.YES),
+    ("dependency_failure", Layer.FRAMEWORK, Retriable.ROOT_CAUSE),
+    ("resource_starvation", Layer.RUNTIME, Retriable.YES),
+    ("pilot_init_failure", Layer.RUNTIME, Retriable.YES),
+    ("hardware_shutdown", Layer.ENVIRONMENT, Retriable.YES),
+    ("env_mismatch", Layer.ENVIRONMENT, Retriable.NO),
+])
+def test_table1_rows(ftype, layer, retriable):
+    e = TABLE_I[ftype]
+    assert e.layer is layer
+    assert e.retriable is retriable
+
+
+def test_table1_detection_strategies():
+    assert TABLE_I["syntax_error"].detection is DetectionStrategy.FTL
+    assert TABLE_I["resource_starvation"].detection is DetectionStrategy.RP
+    assert TABLE_I["hardware_shutdown"].detection is DetectionStrategy.FTL_RP
+    assert TABLE_I["dependency_failure"].detection is DetectionStrategy.RC
+
+
+# ----------------------------------------------------- exception mapping --
+@pytest.mark.parametrize("exc,expected", [
+    (ZeroDivisionError("x"), "logic_error"),
+    (IndexError("x"), "logic_error"),
+    (TypeError("x"), "logic_error"),
+    (MemoryError("cannot allocate"), "resource_starvation"),
+    (ImportError("No module named 'foo'"), "env_mismatch"),
+    (ModuleNotFoundError("No module named 'foo'"), "env_mismatch"),
+    (EnvironmentMismatchError("x"), "env_mismatch"),
+    (UlimitExceededError("x"), "ulimit_exceeded"),
+    (ResourceStarvationError("x"), "resource_starvation"),
+    (PilotJobInitError("x"), "pilot_init_failure"),
+    (HardwareShutdownError("x"), "hardware_shutdown"),
+    (WorkerLostError("x"), "worker_lost"),
+    (DependencyError("x"), "dependency_failure"),
+    (RandomSeedError("x"), "random_seed_error"),
+])
+def test_classify_exception(ftl, exc, expected):
+    assert ftl.classify_exception(exc).failure_type == expected
+
+
+def test_classify_unknown_exception_defaults_to_logic_error(ftl):
+    class Weird(Exception):
+        pass
+    assert ftl.classify_exception(Weird("?")).failure_type == "logic_error"
+
+
+def test_message_rules(ftl):
+    assert ftl.classify_exception(None, message="Too many open FILES").failure_type \
+        == "ulimit_exceeded"
+    assert ftl.classify_exception(None, message="process ran OUT OF MEMORY").failure_type \
+        == "resource_starvation"
+    assert ftl.classify_exception(None, message="no module named 'x'").failure_type \
+        == "env_mismatch"
+
+
+def test_oserror_maps_to_ulimit(ftl):
+    assert ftl.classify_exception(OSError(24, "Too many open files")).failure_type \
+        == "ulimit_exceeded"
+
+
+# ---------------------------------------------------------- extensibility --
+def test_register_custom_entry_and_exception(ftl):
+    class GPUFellOff(Exception):
+        pass
+
+    entry = TaxonomyEntry("gpu_fell_off", Layer.ENVIRONMENT, Retriable.YES,
+                          DetectionStrategy.FTL_RP, "denylist_and_retry",
+                          placement_sensitive=True)
+    ftl.register_entry(entry)
+    ftl.register_exception(GPUFellOff, "gpu_fell_off")
+    got = ftl.classify_exception(GPUFellOff("boom"))
+    assert got.failure_type == "gpu_fell_off"
+    assert got.placement_sensitive
+
+
+def test_register_exception_unknown_type_raises(ftl):
+    with pytest.raises(KeyError):
+        ftl.register_exception(ValueError, "not_a_type")
+
+
+def test_register_message_rule(ftl):
+    ftl.register_message_rule("ECC error", "hardware_shutdown")
+    assert ftl.classify_exception(None, message="ecc ERROR detected").failure_type \
+        == "hardware_shutdown"

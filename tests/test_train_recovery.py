@@ -1,0 +1,71 @@
+"""Training-plane WRATH: recovery from host loss, NaN, stragglers, OOM;
+checkpoint-resume continuity; elastic re-meshing."""
+import shutil
+
+import pytest
+
+from repro.configs import get_smoke_config
+from repro.optim import OptConfig
+from repro.train import TrainEvent, WrathTrainSupervisor
+
+
+def mk(tmp_path, tag, **kw):
+    cfg = get_smoke_config("granite_3_2b")
+    defaults = dict(n_hosts=3, global_batch=6, seq_len=32,
+                    ckpt_dir=str(tmp_path / tag), ckpt_every=5)
+    defaults.update(kw)
+    return WrathTrainSupervisor(
+        cfg, OptConfig(lr=5e-3, warmup_steps=5, total_steps=40), **defaults)
+
+
+def test_clean_run_converges(tmp_path):
+    sup = mk(tmp_path, "clean")
+    rep = sup.run(25)
+    assert rep.steps_completed == 25
+    assert rep.losses[-1] < rep.losses[0]
+    assert not rep.recoveries
+
+
+def test_host_loss_elastic_remesh(tmp_path):
+    sup = mk(tmp_path, "hostloss")
+    rep = sup.run(20, events=[TrainEvent(step=5, kind="host_down",
+                                         host="host01")])
+    assert rep.final_hosts == 2          # re-meshed to surviving hosts
+    assert rep.steps_completed == 20
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_nan_restores_checkpoint(tmp_path):
+    sup = mk(tmp_path, "nan")
+    rep = sup.run(25, events=[TrainEvent(step=12, kind="nan")])
+    assert rep.restores >= 1
+    assert any(r["error"] == "NumericalDivergenceError" for r in rep.recoveries)
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_straggler_speculation_and_denylist(tmp_path):
+    sup = mk(tmp_path, "strag")
+    rep = sup.run(30, events=[TrainEvent(step=5, kind="straggler",
+                                         host="host02", factor=50)])
+    assert rep.speculations >= 1
+    assert "host02" in rep.denylisted     # chronic straggler denylisted
+
+
+def test_oom_shard_routed_to_big_host(tmp_path):
+    """A shard too big for regular hosts lands on the big-memory host via
+    the feasibility-aware retry ladder."""
+    sup = mk(tmp_path, "oom", host_memory_gb=0.5, shard_memory_gb=1.0)
+    rep = sup.run(6)
+    assert rep.steps_completed == 6
+    assert any(r["error"] == "MemoryError" and r["action"] != "fail"
+               for r in rep.recoveries)
+
+
+def test_checkpoint_resume_continuity(tmp_path):
+    sup = mk(tmp_path, "resume")
+    rep1 = sup.run(12)
+    # a new supervisor over the same ckpt dir resumes past step 10
+    sup2 = mk(tmp_path, "resume")
+    rep2 = sup2.run(20)
+    assert rep2.steps_completed <= 10     # only the remaining steps ran
+    assert rep2.losses[-1] <= rep1.losses[0]

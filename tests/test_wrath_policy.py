@@ -1,0 +1,244 @@
+"""Resilience module behaviour: categorization, policy actions, retry ladder."""
+import time
+
+import pytest
+
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core.categorization import FailureCategorizationEngine
+from repro.core.failures import (
+    DependencyError,
+    FailureReport,
+    HardwareShutdownError,
+    RandomSeedError,
+)
+from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+
+
+def _record(name="t", memory_gb=1.0, packages=(), retries=2):
+    td = TaskDef(lambda: None, name, ResourceSpec(memory_gb=memory_gb,
+                                                  packages=tuple(packages)), retries)
+    return new_task_record(td, (), {}, default_retries=retries)
+
+
+# -------------------------------------------------------- categorization --
+def test_categorize_memory_capacity_mismatch():
+    eng = FailureCategorizationEngine()
+    rec = _record(memory_gb=200)
+    rep = FailureReport.from_exception(
+        MemoryError("cannot allocate"), task_id=rec.task_id, node="n0", pool="p",
+        resource_profile={"node_memory_gb": 192.0, "node_mem_in_use_gb": 0.0},
+        requirements=rec.resources.asdict())
+    cat = eng.categorize(rec, rep)
+    assert cat.resolvable
+    assert cat.resource_related
+    assert cat.required_memory_gb == 200
+    assert "capacity" in cat.explanation
+
+
+def test_categorize_transient_contention():
+    eng = FailureCategorizationEngine()
+    rec = _record(memory_gb=6)
+    rep = FailureReport.from_exception(
+        MemoryError("cannot allocate"), task_id=rec.task_id, node="n0", pool="p",
+        resource_profile={"node_memory_gb": 8.0, "node_mem_in_use_gb": 6.0},
+        requirements=rec.resources.asdict())
+    cat = eng.categorize(rec, rep)
+    assert cat.resolvable
+    assert "contention" in cat.explanation
+
+
+def test_categorize_env_mismatch_extracts_packages():
+    eng = FailureCategorizationEngine()
+    rec = _record(packages=("scipy",))
+    rep = FailureReport.from_exception(
+        ImportError("No module named 'scipy'"), task_id=rec.task_id, node="n0",
+        pool="p", requirements=rec.resources.asdict())
+    cat = eng.categorize(rec, rep)
+    assert cat.resolvable
+    assert "scipy" in cat.required_packages
+
+
+def test_categorize_user_error_not_resolvable():
+    eng = FailureCategorizationEngine()
+    rec = _record()
+    rep = FailureReport.from_exception(ZeroDivisionError("div"),
+                                       task_id=rec.task_id)
+    cat = eng.categorize(rec, rep)
+    assert not cat.resolvable
+
+
+def test_categorize_dependency_nonretriable_root_fails_fast():
+    eng = FailureCategorizationEngine()
+    rec = _record()
+    err = DependencyError("parent failed", root_cause=ValueError("bad"))
+    rep = FailureReport.from_exception(err, task_id=rec.task_id)
+    cat = eng.categorize(rec, rep)
+    assert not cat.resolvable
+
+
+def test_categorize_hardware_denylists():
+    eng = FailureCategorizationEngine()
+    rec = _record()
+    rep = FailureReport.from_exception(
+        HardwareShutdownError("node down"), task_id=rec.task_id, node="n3")
+    cat = eng.categorize(rec, rep)
+    assert cat.resolvable
+    assert cat.denylist_node
+
+
+def test_fail_fast_heuristic_multi_node_multi_pool():
+    eng = FailureCategorizationEngine(fail_fast_distinct_nodes=2)
+    rec = _record(memory_gb=500)
+    rec.attempts = [
+        {"attempt": 0, "node": "a0", "pool": "p1", "worker": "w", "ok": False,
+         "error": "MemoryError", "duration": 0.1, "time": 0},
+        {"attempt": 1, "node": "b0", "pool": "p2", "worker": "w", "ok": False,
+         "error": "MemoryError", "duration": 0.1, "time": 0},
+    ]
+    rep = FailureReport.from_exception(
+        MemoryError("x"), task_id=rec.task_id, node="c0", pool="p3",
+        resource_profile={"node_memory_gb": 192.0},
+        requirements=rec.resources.asdict())
+    cat = eng.categorize(rec, rep)
+    assert not cat.resolvable  # recurred across pools -> fail fast
+
+
+def test_random_seed_error_never_fails_fast():
+    eng = FailureCategorizationEngine(fail_fast_distinct_nodes=2)
+    rec = _record()
+    rec.attempts = [
+        {"attempt": i, "node": f"n{i}", "pool": "p", "worker": "w", "ok": False,
+         "error": "RandomSeedError", "duration": 0.1, "time": 0}
+        for i in range(2)]
+    rep = FailureReport.from_exception(RandomSeedError("unlucky"),
+                                       task_id=rec.task_id, node="n9", pool="p")
+    cat = eng.categorize(rec, rep)
+    assert cat.resolvable
+
+
+# ------------------------------------------------------------- end to end --
+def test_memory_failure_hierarchical_retry_to_big_pool():
+    """§VII-C memory scenario: 200 GB task, 192 GB pool + 6 TB pool."""
+    handler = wrath_retry_handler()
+    mon = MonitoringDatabase()
+    cluster = Cluster.paper_testbed(small_nodes=3, big_nodes=1)
+    with DataFlowKernel(cluster, monitor=mon, retry_handler=handler,
+                        default_pool="small-mem", default_retries=2) as dfk:
+        @task(memory_gb=200)
+        def hungry(x):
+            return x + 1
+
+        assert hungry(1).result(timeout=15) == 2
+        assert dfk.stats["retry_success"] == 1
+    # the decisive retry must have moved pools (rung 4)
+    rungs = [d["rung"] for d in handler.decisions]
+    assert 4 in rungs
+
+
+def test_import_failure_hierarchical_retry_to_pkg_pool():
+    handler = wrath_retry_handler()
+    mon = MonitoringDatabase()
+    cluster = Cluster.paper_testbed(small_nodes=3, big_nodes=1,
+                                    with_pkg_pool=True, package="scipy")
+    with DataFlowKernel(cluster, monitor=mon, retry_handler=handler,
+                        default_pool="no-pkg", default_retries=2) as dfk:
+        @task(packages=("scipy",))
+        def needs(x):
+            return x * 2
+
+        assert needs(5).result(timeout=15) == 10
+    assert any(d["failure_type"] == "env_mismatch" for d in handler.decisions)
+
+
+def test_user_error_immediate_termination_no_retries():
+    handler = wrath_retry_handler()
+    with DataFlowKernel(Cluster.homogeneous(2), monitor=MonitoringDatabase(),
+                        retry_handler=handler, default_retries=5) as dfk:
+        @task
+        def boom():
+            raise ValueError("user bug")
+
+        with pytest.raises(ValueError):
+            boom().result(timeout=10)
+        assert dfk.stats["retries"] == 0
+    assert handler.decisions[-1]["action"] == "fail"
+
+
+def test_dependency_children_fail_fast():
+    handler = wrath_retry_handler()
+    with DataFlowKernel(Cluster.homogeneous(2), monitor=MonitoringDatabase(),
+                        retry_handler=handler, default_retries=5) as dfk:
+        @task
+        def parent():
+            raise KeyError("parent bug")
+
+        @task
+        def child(x):
+            return x
+
+        c = child(parent())
+        with pytest.raises(DependencyError):
+            c.result(timeout=10)
+        assert dfk.stats["retries"] == 0
+        assert dfk.stats["dep_failed"] == 1
+
+
+def test_random_seed_error_retries_in_place():
+    handler = wrath_retry_handler()
+    attempts = {"n": 0}
+    with DataFlowKernel(Cluster.homogeneous(2), monitor=MonitoringDatabase(),
+                        retry_handler=handler, default_retries=3) as dfk:
+        @task
+        def flaky():
+            attempts["n"] += 1
+            if attempts["n"] < 3:
+                raise RandomSeedError("bad seed")
+            return "ok"
+
+        assert flaky().result(timeout=10) == "ok"
+        assert dfk.stats["retries"] == 2
+    assert all(d["action"] == "retry" for d in handler.decisions)
+
+
+def test_denylist_added_on_shutdown_and_removed_on_resume():
+    handler = wrath_retry_handler(heartbeat_resume_window=10.0)
+    mon = MonitoringDatabase()
+    cluster = Cluster.homogeneous(3, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon, retry_handler=handler,
+                        default_retries=3, heartbeat_period=0.03,
+                        heartbeat_threshold=3) as dfk:
+        @task
+        def slow(x):
+            time.sleep(0.25)
+            return x
+
+        futs = [slow(i) for i in range(3)]
+        time.sleep(0.05)
+        victim = cluster.all_nodes()[0]
+        victim.shutdown_hardware()
+        for f in futs:
+            f.result(timeout=30)
+        assert victim.name in dfk.denylist
+        # resurrect: heartbeats resume, next decision refreshes the denylist
+        victim.restore_hardware()
+        time.sleep(0.3)
+        handler._refresh_denylist(dfk.context())
+        assert victim.name not in dfk.denylist
+
+
+def test_decision_log_records_rungs_and_layers():
+    handler = wrath_retry_handler()
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    with DataFlowKernel(cluster, monitor=MonitoringDatabase(),
+                        retry_handler=handler, default_pool="small-mem",
+                        default_retries=2) as dfk:
+        @task(memory_gb=200)
+        def hungry():
+            return 1
+
+        hungry().result(timeout=15)
+    d = handler.decisions[0]
+    assert d["layer"] == "runtime"
+    assert d["failure_type"] == "resource_starvation"
+    assert d["action"] in ("retry", "restart_retry")

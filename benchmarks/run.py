@@ -25,6 +25,7 @@ SUITES = {
     "fig5": fig5_overhead.run,
     "table4": table4_success_rates.run,
     "fig6": fig6_scalability.run,
+    "fig6_sched": fig6_scalability.run_schedulers,
     "fig7": fig7_overhead_scaling.run,
     "fig8": fig8_failure_rate.run,
     "roofline": roofline.run,

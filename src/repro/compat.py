@@ -1,0 +1,36 @@
+"""Version-portability shims for the JAX API surface this repo touches.
+
+The container pins an older jax (0.4.x) whose public names differ from the
+current releases the code was written against.  Rather than sprinkling
+``try/except ImportError`` at every call site, the few divergent entry
+points live here:
+
+* :func:`tree_flatten_with_path` — ``jax.tree.flatten_with_path`` (new)
+  vs. ``jax.tree_util.tree_flatten_with_path`` (always present);
+* :func:`tpu_compiler_params` — ``pltpu.CompilerParams`` (new) vs.
+  ``pltpu.TPUCompilerParams`` (0.4.x) for Pallas kernel compiler options.
+
+``repro.launch.mesh.make_mesh`` handles the third divergence
+(``jax.make_mesh(axis_types=...)``) next to the mesh constants it needs.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+
+
+def tree_flatten_with_path(tree: Any, is_leaf=None):
+    """``jax.tree.flatten_with_path`` on any supported jax version."""
+    flatten = getattr(jax.tree, "flatten_with_path", None)
+    if flatten is not None:
+        return flatten(tree, is_leaf=is_leaf)
+    return jax.tree_util.tree_flatten_with_path(tree, is_leaf=is_leaf)
+
+
+def tpu_compiler_params(**kwargs: Any):
+    """Build Pallas-TPU compiler params under either class name."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

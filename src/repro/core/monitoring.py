@@ -125,6 +125,10 @@ class TCPRadio(Radio):
 class PlacementStats:
     successes: int = 0
     failures: int = 0
+    # accumulated wall time of *successful* attempts, for the
+    # HistoryAwareScheduler's "historically fast node" query
+    duration_sum: float = 0.0
+    duration_n: int = 0
 
     @property
     def total(self) -> int:
@@ -133,6 +137,11 @@ class PlacementStats:
     @property
     def success_rate(self) -> float:
         return self.successes / self.total if self.total else 0.0
+
+    @property
+    def avg_duration(self) -> float:
+        """Mean successful-attempt duration (0.0 = no timed observations)."""
+        return self.duration_sum / self.duration_n if self.duration_n else 0.0
 
 
 class MonitoringDatabase:
@@ -165,7 +174,8 @@ class MonitoringDatabase:
             self.record_system_event(message["event"], **message.get("data", {}))
         elif kind == "placement":
             self.record_task_placement(message["task_name"], message["node"],
-                                       message["pool"], ok=message["ok"])
+                                       message["pool"], ok=message["ok"],
+                                       duration=message.get("duration"))
         elif kind == "failure":
             d = message.get("report", {})
             self.failures.append(FailureReport(
@@ -196,13 +206,17 @@ class MonitoringDatabase:
                 del self.resource_profiles[node][:-512]
 
     def record_task_placement(self, task_name: str, node: str, pool: str | None,
-                              *, ok: bool) -> None:
+                              *, ok: bool, duration: float | None = None) -> None:
         with self._lock:
             ns = self._node_history[task_name][node]
             ps = self._pool_history[task_name][pool or "?"]
             if ok:
                 ns.successes += 1
                 ps.successes += 1
+                if duration is not None and duration > 0:
+                    for s in (ns, ps):
+                        s.duration_sum += duration
+                        s.duration_n += 1
             else:
                 ns.failures += 1
                 ps.failures += 1
@@ -218,12 +232,14 @@ class MonitoringDatabase:
 
     def node_history(self, task_name: str) -> dict[str, PlacementStats]:
         with self._lock:
-            return {k: PlacementStats(v.successes, v.failures)
+            return {k: PlacementStats(v.successes, v.failures,
+                                      v.duration_sum, v.duration_n)
                     for k, v in self._node_history[task_name].items()}
 
     def pool_history(self, task_name: str) -> dict[str, PlacementStats]:
         with self._lock:
-            return {k: PlacementStats(v.successes, v.failures)
+            return {k: PlacementStats(v.successes, v.failures,
+                                      v.duration_sum, v.duration_n)
                     for k, v in self._pool_history[task_name].items()}
 
     def best_historical_node(self, task_name: str,

@@ -38,14 +38,26 @@ class ResiliencePolicyEngine:
         self.fail_fast_distinct_nodes = fail_fast_distinct_nodes
         self.heartbeat_resume_window = heartbeat_resume_window
         self.decisions: list[dict] = []   # audit log for tests/benchmarks
+        # one categorization engine + planner reused across failures
+        # (rebuilt only if the engine context's cluster/monitor changes)
+        self._engine: FailureCategorizationEngine | None = None
+        self._planner: HierarchicalRetryPlanner | None = None
 
     # ------------------------------------------------------------------ #
+    def _cached(self, ctx: SchedulingContext) -> tuple[
+            FailureCategorizationEngine, HierarchicalRetryPlanner]:
+        if self._engine is None or self._engine.monitor is not ctx.monitor:
+            self._engine = FailureCategorizationEngine(
+                self.ftl, ctx.monitor,
+                fail_fast_distinct_nodes=self.fail_fast_distinct_nodes)
+        if (self._planner is None or self._planner.cluster is not ctx.cluster
+                or self._planner.monitor is not ctx.monitor):
+            self._planner = HierarchicalRetryPlanner(ctx.cluster, ctx.monitor)
+        return self._engine, self._planner
+
     def __call__(self, record, report: FailureReport,
                  ctx: SchedulingContext) -> RetryDecision:
-        engine = FailureCategorizationEngine(
-            self.ftl, ctx.monitor,
-            fail_fast_distinct_nodes=self.fail_fast_distinct_nodes)
-        planner = HierarchicalRetryPlanner(ctx.cluster, ctx.monitor)
+        engine, planner = self._cached(ctx)
 
         self._refresh_denylist(ctx)
         cat = engine.categorize(record, report)
@@ -80,7 +92,8 @@ class ResiliencePolicyEngine:
         if record.retry_count >= record.max_retries:
             return RetryDecision(Action.FAIL, reason="retries exhausted")
 
-        placement = planner.plan(record, report, cat, ctx.denylist)
+        placement = planner.plan(record, report, cat, ctx.denylist,
+                                 scheduler=getattr(ctx, "scheduler", None))
         if placement is None:
             return RetryDecision(
                 Action.FAIL,

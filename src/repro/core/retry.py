@@ -12,6 +12,13 @@ The planner is feasibility-aware: a candidate node must satisfy the task's
 (possibly corrected) resource requirements, must be healthy, must not be
 denylisted, and — for placement-sensitive failures — must not be a node on
 which this task already failed with the same error.
+
+Each rung expresses its placement through the engine's
+:class:`~repro.engine.scheduler.Scheduler` when one is provided (via
+``SchedulingContext.scheduler``): the rung computes the *feasible candidate
+set* and the scheduler picks within it, so retries inherit the engine's
+load-/history-awareness.  Without a scheduler the first candidate in pool
+order wins (legacy behaviour).
 """
 from __future__ import annotations
 
@@ -38,7 +45,7 @@ class HierarchicalRetryPlanner:
 
     # ------------------------------------------------------------------ #
     def plan(self, record, report: FailureReport, cat: Categorization,
-             denylist: set[str]) -> Placement | None:
+             denylist: set[str], scheduler=None) -> Placement | None:
         spec = self._effective_spec(record, cat)
         failed_nodes = {a["node"] for a in record.attempts if not a["ok"]}
         if report.node:
@@ -53,23 +60,37 @@ class HierarchicalRetryPlanner:
             sat, _ = node.satisfies(spec)
             return sat
 
+        def choose(candidates: list[Node], pool=None) -> Node | None:
+            """Rung placement goes through the engine scheduler when bound."""
+            if not candidates:
+                return None
+            if scheduler is not None:
+                picked = scheduler.select(record, candidates, pool=pool)
+                if picked is not None:
+                    return picked
+            return candidates[0]
+
         # Rung 1: corrected-requirements placement inside the home pool.
         # Meaningful when the categorizer adjusted requirements or when the
         # failure was transient contention (same node may be fine once idle).
         if home_pool and home_pool in self.cluster.pools:
+            pool = self.cluster.pools[home_pool]
             allow_same = not cat.placement_sensitive
-            for node in self.cluster.pools[home_pool].nodes:
-                if ok(node, allow_failed_nodes=allow_same):
-                    return Placement(home_pool, node.name, 1,
-                                     "rung1: requirement-aware retry in home pool")
+            node = choose([n for n in pool.nodes
+                           if ok(n, allow_failed_nodes=allow_same)], pool)
+            if node is not None:
+                return Placement(home_pool, node.name, 1,
+                                 "rung1: requirement-aware retry in home pool")
 
         # Rung 2: a different node of the same pool (even one we have not
         # profiled), skipping nodes this task already failed on.
         if home_pool and home_pool in self.cluster.pools:
-            for node in self.cluster.pools[home_pool].nodes:
-                if node.name not in failed_nodes and ok(node, allow_failed_nodes=True):
-                    return Placement(home_pool, node.name, 2,
-                                     "rung2: different node, same pool")
+            pool = self.cluster.pools[home_pool]
+            node = choose([n for n in pool.nodes if n.name not in failed_nodes
+                           and ok(n, allow_failed_nodes=True)], pool)
+            if node is not None:
+                return Placement(home_pool, node.name, 2,
+                                 "rung2: different node, same pool")
 
         # Rung 3: historically most-successful node for this task template.
         if self.monitor is not None:
@@ -88,18 +109,20 @@ class HierarchicalRetryPlanner:
             pools.sort(key=lambda p: hist.get(p.name).success_rate
                        if hist.get(p.name) else 0.0, reverse=True)
         for pool in pools:
-            for node in pool.nodes:
-                if ok(node, allow_failed_nodes=False):
-                    return Placement(pool.name, node.name, 4,
-                                     f"rung4: different pool {pool.name!r}")
+            node = choose([n for n in pool.nodes
+                           if ok(n, allow_failed_nodes=False)], pool)
+            if node is not None:
+                return Placement(pool.name, node.name, 4,
+                                 f"rung4: different pool {pool.name!r}")
         # last resort: any feasible node anywhere, even previously failed,
         # for non-placement-sensitive failures (pure re-execution semantics)
         if not cat.placement_sensitive:
             for pool in self.cluster.pools.values():
-                for node in pool.nodes:
-                    if ok(node, allow_failed_nodes=True):
-                        return Placement(pool.name, node.name, 1,
-                                         "rung1: re-execute (transient failure)")
+                node = choose([n for n in pool.nodes
+                               if ok(n, allow_failed_nodes=True)], pool)
+                if node is not None:
+                    return Placement(pool.name, node.name, 1,
+                                     "rung1: re-execute (transient failure)")
         return None
 
     # ------------------------------------------------------------------ #

@@ -7,7 +7,17 @@ WRATH (``repro.core``) plugs into the DataFlowKernel as the retry handler.
 """
 from repro.engine.task import task, TaskDef, TaskRecord, AppFuture, TaskState, ResourceSpec
 from repro.engine.cluster import Cluster, ResourcePool, Node, Worker
+from repro.engine.events import EventLoop, ScheduledEvent
 from repro.engine.executor import Executor
+from repro.engine.scheduler import (
+    SCHEDULERS,
+    FeasibilityScheduler,
+    HistoryAwareScheduler,
+    LeastLoadedScheduler,
+    RoundRobinScheduler,
+    Scheduler,
+    make_scheduler,
+)
 from repro.engine.dfk import DataFlowKernel
 
 __all__ = [
@@ -23,4 +33,13 @@ __all__ = [
     "Worker",
     "Executor",
     "DataFlowKernel",
+    "EventLoop",
+    "ScheduledEvent",
+    "Scheduler",
+    "RoundRobinScheduler",
+    "FeasibilityScheduler",
+    "LeastLoadedScheduler",
+    "HistoryAwareScheduler",
+    "SCHEDULERS",
+    "make_scheduler",
 ]

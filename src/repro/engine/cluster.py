@@ -142,6 +142,7 @@ class Worker:
         self.node = node
         self.on_result = on_result
         self.alive = True
+        self.busy = False  # True while executing a task (load metric input)
         self._thread = threading.Thread(target=self._loop, name=self.worker_id, daemon=True)
 
     def start(self) -> None:
@@ -160,7 +161,11 @@ class Worker:
             if rec is None:  # poison pill
                 self.alive = False
                 break
-            self._run_one(rec)
+            self.busy = True
+            try:
+                self._run_one(rec)
+            finally:
+                self.busy = False
 
     # -- execution with environment enforcement -------------------------
     def _run_one(self, rec: TaskRecord) -> None:

@@ -4,7 +4,25 @@ Responsibilities mirror Parsl's DFK: dependency resolution (DAG), task
 scheduling onto executors, task status tracking — and the *retry handler*
 hook through which WRATH's resilience module is attached (paper §VI-B).
 
-The DFK also runs the framework-side watchers:
+Since the event-driven refactor the DFK is built on two injected
+subsystems:
+
+* a **scheduler** (:mod:`repro.engine.scheduler`) that owns every
+  placement decision.  ``DataFlowKernel(scheduler=...)`` accepts any of
+  the four strategies (round-robin, feasibility, least-loaded,
+  history-aware); the default :class:`RoundRobinScheduler` reproduces the
+  pre-refactor dispatch placements (failure-free runs are node-for-node
+  identical).  The same scheduler instance is shared with the executors
+  (per-pool dispatch) and the retry planner (rung candidate selection), so
+  load- and history-awareness apply uniformly — which also means retry and
+  speculation placements consume ticks from the same per-pool rotation
+  instead of the old first-feasible-candidate rule;
+* an **event loop** (:mod:`repro.engine.events`) through which every
+  dispatch, delayed retry, heartbeat check and straggler check flows as a
+  time-ordered event — no per-retry ``threading.Timer``, no polling
+  watcher thread.
+
+The framework-side watchers are periodic events:
 
 * a **heartbeat watcher** that declares nodes lost when their system
   monitoring agent goes silent (paper §IV), failing in-flight tasks with
@@ -12,12 +30,16 @@ The DFK also runs the framework-side watchers:
 * a **straggler watcher** that (optionally) speculatively re-executes tasks
   running far beyond their expected duration on a different node — the
   training-plane straggler mitigation, available to the task plane too.
+
+Batched submission with backpressure is available via :meth:`map`: the
+number of outstanding (submitted, unfinished) tasks is capped so a large
+sweep cannot flood the executors' queues.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import Any
+from typing import Any, Iterable
 
 from repro.core.failures import (
     DependencyError,
@@ -26,6 +48,7 @@ from repro.core.failures import (
     ResourceStarvationError,
 )
 from repro.engine.cluster import Cluster, Node
+from repro.engine.events import EventLoop
 from repro.engine.executor import Executor
 from repro.engine.retry_api import (
     Action,
@@ -33,6 +56,7 @@ from repro.engine.retry_api import (
     SchedulingContext,
     baseline_retry_handler,
 )
+from repro.engine.scheduler import RoundRobinScheduler, Scheduler
 from repro.engine.task import AppFuture, TaskDef, TaskRecord, TaskState, new_task_record
 
 
@@ -69,22 +93,26 @@ class DataFlowKernel:
         *,
         retry_handler=None,
         monitor=None,
+        scheduler: Scheduler | None = None,
         default_retries: int = 2,
         default_pool: str | None = None,
         heartbeat_period: float = 0.05,
         heartbeat_threshold: float = 5.0,   # missed periods before node is lost
         speculative_execution: bool = False,
         straggler_factor: float = 3.0,
+        map_backpressure: int | None = None,
     ):
         self.cluster = cluster
         self.monitor = monitor
         self.retry_handler = retry_handler or baseline_retry_handler
+        self.scheduler = scheduler or RoundRobinScheduler()
         self.default_retries = default_retries
         self.default_pool = default_pool or next(iter(cluster.pools))
         self.heartbeat_period = heartbeat_period
         self.heartbeat_threshold = heartbeat_threshold
         self.speculative_execution = speculative_execution
         self.straggler_factor = straggler_factor
+        self.map_backpressure = map_backpressure
 
         self.tasks: dict[str, TaskRecord] = {}
         self.executors: dict[str, Executor] = {}
@@ -93,11 +121,12 @@ class DataFlowKernel:
         self._children: dict[str, list[TaskRecord]] = {}
         self._speculated: set[str] = set()
         self._done_first: dict[str, bool] = {}
+        self._resume_logged: set[str] = set()  # nodes whose resume was recorded
 
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         self._outstanding = 0
-        self._stop = threading.Event()
+        self.events = EventLoop(name="dfk-events")
 
         self.stats: dict[str, float] = {
             "submitted": 0, "completed": 0, "failed": 0, "dep_failed": 0,
@@ -123,27 +152,33 @@ class DataFlowKernel:
 
     def start(self) -> None:
         self.stats["start_time"] = time.time()
+        self.scheduler.bind(cluster=self.cluster, monitor=self.monitor)
         hb = self.monitor.heartbeat if self.monitor is not None else None
         for name, pool in self.cluster.pools.items():
             ex = Executor(
-                pool, self._on_result, heartbeat=hb,
+                pool, self._on_result, scheduler=self.scheduler, heartbeat=hb,
                 denylisted=lambda node: node in self.denylist,
                 heartbeat_period=self.heartbeat_period)
             ex.start()
             self.executors[name] = ex
-        self._watcher = threading.Thread(target=self._watch_loop, daemon=True,
-                                         name="dfk-watcher")
-        self._watcher.start()
+        self.events.start()
+        self.events.schedule_periodic(
+            self.heartbeat_period, self._check_heartbeats, name="heartbeat-check")
+        if self.speculative_execution:
+            self.events.schedule_periodic(
+                self.heartbeat_period, self._check_stragglers,
+                name="straggler-check")
 
     def shutdown(self) -> None:
-        self._stop.set()
+        self.events.stop()
         for ex in self.executors.values():
             ex.stop()
 
     def context(self) -> SchedulingContext:
         return SchedulingContext(
             cluster=self.cluster, monitor=self.monitor,
-            denylist=self.denylist, default_pool=self.default_pool)
+            denylist=self.denylist, default_pool=self.default_pool,
+            scheduler=self.scheduler)
 
     # ------------------------------------------------------------------ #
     # submission & dependency resolution
@@ -164,16 +199,45 @@ class DataFlowKernel:
                                            resources=rec.resources.asdict())
         if not pending:
             if self._claim_ready(rec):
-                self._maybe_dispatch(rec)
+                self.events.call_soon(self._maybe_dispatch, rec, name="dispatch")
         else:
             for f in pending:
                 f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
         return rec.future  # type: ignore[return-value]
 
+    def map(self, td: TaskDef, arg_iter: Iterable[Any], *,
+            max_outstanding: int | None = None) -> list[AppFuture]:
+        """Batched submission with an outstanding-task backpressure cap.
+
+        Each element of ``arg_iter`` becomes one task invocation (a tuple
+        element is splatted as positional args, anything else is passed as
+        the single argument).  At most ``max_outstanding`` (default: the
+        DFK's ``map_backpressure``; ``None`` = unlimited) tasks from this
+        map are outstanding — submitted but unfinished — at once; further
+        submissions block until earlier tasks finish, bounding executor
+        queue depth for large sweeps.
+        """
+        cap = max_outstanding if max_outstanding is not None else self.map_backpressure
+        if cap is not None and cap < 1:
+            raise ValueError(f"max_outstanding must be >= 1, got {cap}")
+        gate = threading.BoundedSemaphore(cap) if cap else None
+        futures: list[AppFuture] = []
+        for args in arg_iter:
+            if not isinstance(args, tuple):
+                args = (args,)
+            if gate is not None:
+                gate.acquire()
+                fut = self.submit(td, args, {})
+                fut.add_done_callback(lambda _f, g=gate: g.release())
+            else:
+                fut = self.submit(td, args, {})
+            futures.append(fut)
+        return futures
+
     def _dep_done(self, rec: TaskRecord) -> None:
         if not self._claim_ready(rec):
             return
-        self._maybe_dispatch(rec)
+        self.events.call_soon(self._maybe_dispatch, rec, name="dispatch")
 
     def _claim_ready(self, rec: TaskRecord) -> bool:
         """Atomically move PENDING -> READY once all parents resolved.
@@ -235,6 +299,14 @@ class DataFlowKernel:
     def _on_result(self, rec: TaskRecord, result: Any,
                    err: BaseException | None, worker: Any) -> None:
         pool, node = self._assignment.get(rec.task_id, (None, None))
+        # attribute the attempt to the node that actually ran it: for a
+        # speculative copy the assignment table still points at the
+        # straggler, which would credit the backup's fast finish to the
+        # slow node and poison the placement history
+        wnode = getattr(worker, "node", None)
+        if wnode is not None:
+            node = wnode.name
+            pool = wnode.pool.name if wnode.pool is not None else pool
         duration = rec.end_time - rec.start_time
         rec.record_attempt(node=node or "?", pool=pool or "?",
                            worker=getattr(worker, "worker_id", "?"),
@@ -247,7 +319,7 @@ class DataFlowKernel:
                 error=type(err).__name__ if err else None)
             if node:
                 self.monitor.record_task_placement(
-                    rec.name, node, pool, ok=err is None)
+                    rec.name, node, pool, ok=err is None, duration=duration)
         with self._lock:
             if self._done_first.get(rec.task_id):
                 return  # a speculative copy already finished this task
@@ -329,12 +401,13 @@ class DataFlowKernel:
                 rec.target_node = decision.target_node
                 if decision.resource_overrides:
                     rec.resource_overrides.update(decision.resource_overrides)
+            # delayed retries are ordinary events on the engine loop — no
+            # per-retry Timer thread
             if decision.delay_s > 0:
-                timer = threading.Timer(decision.delay_s, self._dispatch, args=(rec,))
-                timer.daemon = True
-                timer.start()
+                self.events.call_later(decision.delay_s, self._dispatch, rec,
+                                       name="delayed-retry")
             else:
-                self._dispatch(rec)
+                self.events.call_soon(self._dispatch, rec, name="retry-dispatch")
             return
 
         # terminal failure
@@ -363,18 +436,8 @@ class DataFlowKernel:
             fut.set_exception(error)
 
     # ------------------------------------------------------------------ #
-    # watchers: heartbeat loss + stragglers
+    # watchers: heartbeat loss + stragglers (periodic events)
     # ------------------------------------------------------------------ #
-    def _watch_loop(self) -> None:
-        while not self._stop.is_set():
-            try:
-                self._check_heartbeats()
-                if self.speculative_execution:
-                    self._check_stragglers()
-            except Exception:  # noqa: BLE001 - watcher must not die
-                pass
-            time.sleep(self.heartbeat_period)
-
     def _check_heartbeats(self) -> None:
         if self.monitor is None:
             return
@@ -384,16 +447,29 @@ class DataFlowKernel:
             node = self.cluster.find_node(node_name)
             if node is None:
                 continue
-            if now - last > stale_after and node_name not in self.denylist:
-                # silent node: environment-layer failure detected via
-                # heartbeat loss (paper §III-B / §IV)
-                self.monitor.record_system_event(
-                    "heartbeat_lost", node=node_name, stale_s=now - last)
-                self._fail_tasks_on_node(node_name)
-            elif now - last <= stale_after and node_name in self.denylist:
-                # node resumed communication: HTCondor-style un-denylist
-                # is handled by the policy engine via monitor events
-                self.monitor.record_system_event("heartbeat_resumed", node=node_name)
+            if now - last > stale_after:
+                # silence re-arms the next resume transition even while the
+                # node is denylisted — a second lost->resumed cycle must
+                # produce a second heartbeat_resumed event
+                self._resume_logged.discard(node_name)
+                if node_name not in self.denylist:
+                    # silent node: environment-layer failure detected via
+                    # heartbeat loss (paper §III-B / §IV)
+                    self.monitor.record_system_event(
+                        "heartbeat_lost", node=node_name, stale_s=now - last)
+                    self._fail_tasks_on_node(node_name)
+            elif node_name in self.denylist:
+                # node resumed communication: HTCondor-style un-denylist is
+                # handled by the policy engine via monitor events.  Record
+                # the resume once per transition, not on every check while
+                # the node awaits un-denylisting.
+                if node_name not in self._resume_logged:
+                    self._resume_logged.add(node_name)
+                    self.monitor.record_system_event(
+                        "heartbeat_resumed", node=node_name)
+            else:
+                # healthy & trusted again: arm the next resume transition
+                self._resume_logged.discard(node_name)
 
     def _fail_tasks_on_node(self, node_name: str) -> None:
         victims = [rec for tid, rec in self.tasks.items()
@@ -428,10 +504,11 @@ class DataFlowKernel:
                 if ex is None:
                     continue
                 # place the backup copy away from the straggler node
-                for cand in ex.eligible_nodes(copy):
-                    if cand.name != node:
-                        copy.target_node = cand.name
-                        break
+                candidates = [c for c in ex.eligible_nodes(copy)
+                              if c.name != node]
+                target = self.scheduler.select(copy, candidates, pool=ex.pool)
+                if target is not None:
+                    copy.target_node = target.name
                 ex.submit(copy)
                 if self.monitor is not None:
                     self.monitor.record_task_event(

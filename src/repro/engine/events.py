@@ -1,0 +1,151 @@
+"""Event-driven core: one time-ordered event queue for the whole engine.
+
+Pre-refactor the DataFlowKernel mixed three concurrency mechanisms: a
+``threading.Timer`` per delayed retry, a dedicated ``_watch_loop`` polling
+thread for heartbeat/straggler checks, and inline dispatch on whichever
+thread happened to complete a dependency.  This module replaces all three
+with a single :class:`EventLoop`: a min-heap of timestamped events drained
+by one daemon thread under one lock discipline.
+
+* **dispatches** are ``call_soon`` events (serialized on the loop thread);
+* **delayed retries** are ``call_later`` events (cancellable, no Timer
+  thread per retry);
+* **heartbeat and straggler checks** are ``period=``-rescheduling events
+  instead of a sleep-poll thread.
+
+Event callbacks must never block for long — they run on the single loop
+thread.  Exceptions raised by a callback are swallowed (a watcher bug must
+not kill the engine), mirroring the old watcher loop's contract.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable
+
+
+class ScheduledEvent:
+    """Handle for one scheduled callback; ``cancel()`` is race-safe."""
+
+    __slots__ = ("when", "fn", "args", "name", "period", "cancelled")
+
+    def __init__(self, when: float, fn: Callable[..., Any], args: tuple,
+                 name: str, period: float | None):
+        self.when = when
+        self.fn = fn
+        self.args = args
+        self.name = name
+        self.period = period       # not None => reschedules itself
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        kind = f"every {self.period}s" if self.period else f"at {self.when:.3f}"
+        return f"<ScheduledEvent {self.name!r} {kind}>"
+
+
+class EventLoop:
+    """Single-threaded, time-ordered event queue.
+
+    Thread-safe producers (``call_soon`` / ``call_later`` / periodic
+    events may be scheduled from any thread, including from inside a
+    running callback); single consumer thread executes events in
+    timestamp order, FIFO among equal timestamps.
+    """
+
+    def __init__(self, name: str = "engine-events"):
+        self._heap: list[tuple[float, int, ScheduledEvent]] = []
+        self._cond = threading.Condition()
+        self._seq = itertools.count()
+        self._stopped = False
+        self._thread = threading.Thread(target=self._run, daemon=True, name=name)
+        # observability: how many events have executed, by name
+        self.dispatched: dict[str, int] = {}
+
+    # -- lifecycle --------------------------------------------------------
+    def start(self) -> "EventLoop":
+        self._thread.start()
+        return self
+
+    def stop(self) -> None:
+        """Stop the loop; pending events are dropped (daemon semantics,
+        matching the old daemon Timer threads at shutdown)."""
+        with self._cond:
+            self._stopped = True
+            self._cond.notify_all()
+
+    def join(self, timeout: float | None = None) -> None:
+        self._thread.join(timeout)
+
+    # -- producers --------------------------------------------------------
+    def call_at(self, when: float, fn: Callable[..., Any], *args: Any,
+                name: str = "", period: float | None = None) -> ScheduledEvent:
+        """Schedule at an absolute ``time.monotonic()`` timestamp.
+
+        The loop runs on the monotonic clock so a wall-clock step (NTP)
+        can neither stall heartbeat/straggler checks nor fire retries
+        early — parity with the ``threading.Timer``/sleep-loop mechanisms
+        this replaces.
+        """
+        ev = ScheduledEvent(when, fn, args, name or fn.__name__, period)
+        with self._cond:
+            if self._stopped:
+                ev.cancelled = True
+                return ev
+            heapq.heappush(self._heap, (ev.when, next(self._seq), ev))
+            self._cond.notify_all()
+        return ev
+
+    def call_later(self, delay: float, fn: Callable[..., Any], *args: Any,
+                   name: str = "") -> ScheduledEvent:
+        return self.call_at(time.monotonic() + max(delay, 0.0), fn, *args, name=name)
+
+    def call_soon(self, fn: Callable[..., Any], *args: Any,
+                  name: str = "") -> ScheduledEvent:
+        # stamped "now", not 0.0: a burst of soon-events must interleave
+        # FIFO with already-due timers (heartbeat checks, due retries)
+        # instead of starving them until the burst drains
+        return self.call_at(time.monotonic(), fn, *args, name=name)
+
+    def schedule_periodic(self, period: float, fn: Callable[..., Any],
+                          *args: Any, name: str = "") -> ScheduledEvent:
+        """Run ``fn`` every ``period`` seconds until cancelled/stopped."""
+        return self.call_at(time.monotonic() + period, fn, *args,
+                            name=name or fn.__name__, period=period)
+
+    def pending(self) -> int:
+        with self._cond:
+            return sum(1 for _, _, ev in self._heap if not ev.cancelled)
+
+    # -- consumer ---------------------------------------------------------
+    def _run(self) -> None:
+        while True:
+            with self._cond:
+                while not self._stopped:
+                    if not self._heap:
+                        self._cond.wait()
+                        continue
+                    delay = self._heap[0][0] - time.monotonic()
+                    if delay <= 0:
+                        break
+                    self._cond.wait(timeout=delay)
+                if self._stopped:
+                    return
+                _, _, ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            try:
+                ev.fn(*ev.args)
+            except Exception:  # noqa: BLE001 - an event must not kill the loop
+                pass
+            self.dispatched[ev.name] = self.dispatched.get(ev.name, 0) + 1
+            if ev.period is not None and not ev.cancelled:
+                with self._cond:
+                    if not self._stopped:
+                        ev.when = time.monotonic() + ev.period
+                        heapq.heappush(self._heap, (ev.when, next(self._seq), ev))
+                        self._cond.notify_all()

@@ -3,18 +3,20 @@
 One :class:`Executor` wraps one :class:`~repro.engine.cluster.ResourcePool`
 (the Parsl executor ↔ resource-pool correspondence the paper's hierarchical
 retry rung 4 moves tasks across).  The executor maintains the pool's node
-managers, performs node selection (round-robin over healthy, non-denylisted
-nodes, honouring placement pins from the retry handler), and relays worker
-results back to the DFK.
+managers, relays worker results back to the DFK, and exposes per-node load
+metrics — but *node selection is delegated to an injected*
+:class:`~repro.engine.scheduler.Scheduler` (round-robin by default, for
+baseline parity).  Placement pins from the retry handler
+(``record.target_node``) are honoured before the scheduler is consulted.
 """
 from __future__ import annotations
 
-import itertools
 import threading
 from typing import Any, Callable
 
 from repro.core.failures import PilotJobInitError
 from repro.engine.cluster import Node, NodeManager, ResourcePool
+from repro.engine.scheduler import RoundRobinScheduler, Scheduler, node_load
 from repro.engine.task import TaskRecord
 
 
@@ -24,15 +26,16 @@ class Executor:
         pool: ResourcePool,
         on_result: Callable[[TaskRecord, Any, BaseException | None, Any], None],
         *,
+        scheduler: Scheduler | None = None,
         heartbeat: Callable[[str, float], None] | None = None,
         denylisted: Callable[[str], bool] = lambda node: False,
         heartbeat_period: float = 0.05,
     ):
         self.pool = pool
         self.on_result = on_result
+        self.scheduler = scheduler or RoundRobinScheduler()
         self.denylisted = denylisted
         self.managers: dict[str, NodeManager] = {}
-        self._rr = itertools.count()
         self._lock = threading.Lock()
         self._heartbeat = heartbeat
         self._heartbeat_period = heartbeat_period
@@ -62,28 +65,23 @@ class Executor:
 
     # -- scheduling --------------------------------------------------------
     def eligible_nodes(self, record: TaskRecord) -> list[Node]:
-        spec = record.effective_resources()
-        out = []
-        for n in self.pool.healthy_nodes():
-            if self.denylisted(n.name):
-                continue
-            # static feasibility: never schedule onto a node that can't
-            # possibly satisfy the spec *if the scheduler knows better*.
-            # NOTE: baseline Parsl does NOT check this — feasibility-aware
-            # placement only happens when WRATH pins target_node/pool.
-            out.append(n)
-        return out
+        """Healthy, non-denylisted nodes in pool order.
+
+        Static feasibility (spec vs. node) is NOT applied here — baseline
+        Parsl does not check it; feasibility-aware placement is the job of
+        :class:`~repro.engine.scheduler.FeasibilityScheduler` or of WRATH
+        pinning ``target_node``/``target_pool``.
+        """
+        return [n for n in self.pool.healthy_nodes()
+                if not self.denylisted(n.name)]
 
     def select_node(self, record: TaskRecord) -> Node | None:
         if record.target_node:
             n = next((n for n in self.pool.nodes if n.name == record.target_node), None)
             if n is not None and n.healthy and not self.denylisted(n.name):
                 return n
-        nodes = self.eligible_nodes(record)
-        if not nodes:
-            return None
-        with self._lock:
-            return nodes[next(self._rr) % len(nodes)]
+        return self.scheduler.select(record, self.eligible_nodes(record),
+                                     pool=self.pool)
 
     def submit(self, record: TaskRecord) -> Node | None:
         """Queue the task on a node; returns the chosen node (None = no node)."""
@@ -99,6 +97,12 @@ class Executor:
         if mgr is None:
             return 0
         return mgr.restart_dead_workers()
+
+    # -- load metrics (scheduler inputs) -----------------------------------
+    def loads(self) -> dict[str, float]:
+        """Per-node load (queued + in-flight) — the metric the load-aware
+        schedulers consume via :func:`~repro.engine.scheduler.node_load`."""
+        return {n.name: node_load(n) for n in self.pool.nodes}
 
     def queued_tasks(self) -> int:
         return sum(n.task_queue.qsize() for n in self.pool.nodes)

@@ -43,12 +43,20 @@ class RetryHandler(Protocol):
 
 @dataclass
 class SchedulingContext:
-    """What a retry handler may inspect: the cluster view + history access."""
+    """What a retry handler may inspect: the cluster view + history access.
+
+    ``scheduler`` is the engine's active placement policy
+    (:class:`repro.engine.scheduler.Scheduler`); handlers and the retry
+    planner use it to choose among equally-valid rung candidates, so e.g. a
+    least-loaded engine also load-balances its retries.  ``None`` preserves
+    the legacy first-feasible-candidate behaviour.
+    """
 
     cluster: Any                      # repro.engine.cluster.Cluster
     monitor: Any                      # repro.core.monitoring.MonitoringDatabase | None
     denylist: set[str] = field(default_factory=set)   # node names
     default_pool: str | None = None
+    scheduler: Any = None             # repro.engine.scheduler.Scheduler | None
 
 
 def baseline_retry_handler(record, report: FailureReport, ctx: SchedulingContext) -> RetryDecision:

@@ -16,6 +16,7 @@ import argparse
 import json
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.engine.scheduler import SCHEDULERS, make_scheduler
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor
 
@@ -46,6 +47,9 @@ def main() -> None:
     ap.add_argument("--ckpt-every", type=int, default=20)
     ap.add_argument("--inject", action="append", default=[],
                     help="failure event kind:step[:host[:factor]] (repeatable)")
+    ap.add_argument("--scheduler", default=None, choices=sorted(SCHEDULERS),
+                    help="placement policy for shard->host assignment and "
+                         "speculation targets (default: legacy fixed order)")
     ap.add_argument("--json", action="store_true", help="machine-readable report")
     args = ap.parse_args()
 
@@ -62,7 +66,8 @@ def main() -> None:
         cfg, OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
                        total_steps=args.steps),
         n_hosts=args.hosts, global_batch=args.global_batch, seq_len=args.seq,
-        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+        ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        scheduler=make_scheduler(args.scheduler) if args.scheduler else None)
     events = [parse_event(e) for e in args.inject]
     rep = sup.run(args.steps, events=events)
 

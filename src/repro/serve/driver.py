@@ -8,6 +8,15 @@ denylisted and the in-flight batch is retried on a healthy replica — the
 decode state is recovered from the last per-step state snapshot, so no
 generated tokens are lost (atomic-step semantics, the serving analog of
 the paper's atomic tasks).
+
+Replica selection goes through the same pluggable
+:class:`~repro.engine.scheduler.Scheduler` interface as the task plane
+(``WrathServeDriver(scheduler=...)``): the default round-robin spreads
+successive batches across healthy replicas instead of hammering the first
+one, and a least-loaded or history-aware scheduler can be dropped in
+unchanged.  Per-batch placements (and decode wall time) are recorded in
+the monitoring database, so the history-aware scheduler learns fast
+replicas over time.
 """
 from __future__ import annotations
 
@@ -24,6 +33,7 @@ from repro.core.failures import FailureReport, HardwareShutdownError
 from repro.core.policy import ResiliencePolicyEngine
 from repro.engine.cluster import Cluster, Node, ResourcePool
 from repro.engine.retry_api import Action, SchedulingContext
+from repro.engine.scheduler import RoundRobinScheduler, Scheduler
 from repro.engine.task import ResourceSpec, TaskDef, new_task_record
 from repro.models import cache_defs, decode_step, materialize, param_defs
 from repro.models.config import ModelConfig
@@ -53,7 +63,8 @@ class ServeReport:
 
 class WrathServeDriver:
     def __init__(self, cfg: ModelConfig, *, n_replicas: int = 3,
-                 max_batch: int = 4, seed: int = 0):
+                 max_batch: int = 4, seed: int = 0,
+                 scheduler: Scheduler | None = None):
         self.cfg = cfg
         self.max_batch = max_batch
         nodes = [Node(f"replica{i}", workers_per_node=1)
@@ -61,17 +72,27 @@ class WrathServeDriver:
         self.cluster = Cluster([ResourcePool("serve", nodes)])
         self.monitor = MonitoringDatabase()
         self.policy = ResiliencePolicyEngine()
+        self.scheduler = (scheduler or RoundRobinScheduler()).bind(
+            cluster=self.cluster, monitor=self.monitor)
         self.denylist: set[str] = set()
         self.params = materialize(param_defs(cfg), jax.random.PRNGKey(seed))
         self._decode = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg))
 
     def _ctx(self) -> SchedulingContext:
         return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
-                                 denylist=self.denylist, default_pool="serve")
+                                 denylist=self.denylist, default_pool="serve",
+                                 scheduler=self.scheduler)
 
     def replicas(self) -> list[Node]:
         return [n for n in self.cluster.pools["serve"].nodes
                 if n.healthy and n.name not in self.denylist]
+
+    def _pick_replica(self, rec, exclude: str | None = None) -> Node | None:
+        """Scheduler-driven replica selection over the healthy serve pool."""
+        pool = self.cluster.pools["serve"]
+        candidates = [n for n in self.replicas() if n.name != exclude]
+        return self.scheduler.select(rec, candidates or self.replicas(),
+                                     pool=pool)
 
     # ------------------------------------------------------------------ #
     def _decode_on(self, replica: Node, state: dict, batch: dict):
@@ -96,7 +117,16 @@ class WrathServeDriver:
                 max(r.max_new_tokens for r in batch_reqs)
             state = materialize(cache_defs(self.cfg, b, maxlen),
                                 jax.random.PRNGKey(0))
-            replica = self.replicas()[0]
+            # one task record per batch: retry budget and attempt history
+            # are tracked across replica failovers of the same batch
+            rec = new_task_record(
+                TaskDef(lambda: None, "decode_batch", ResourceSpec(), 2),
+                (), {}, default_retries=2)
+            replica = self._pick_replica(rec)
+            if replica is None:
+                failed += b
+                continue
+            batch_t0 = time.time()
             # prefill: feed prompt tokens one by one (tiny models; a real
             # deployment uses prefill_forward)
             steps = max(len(r.prompt) for r in batch_reqs) + \
@@ -116,9 +146,12 @@ class WrathServeDriver:
                         replica, state, {"inputs": jnp.asarray(toks)})
                     decode_calls += 1
                 except HardwareShutdownError as err:
-                    rec = new_task_record(
-                        TaskDef(lambda: None, "decode_batch",
-                                ResourceSpec(), 2), (), {}, default_retries=2)
+                    rec.record_attempt(node=replica.name, pool="serve",
+                                       worker="-", ok=False,
+                                       error=type(err).__name__,
+                                       duration=time.time() - batch_t0)
+                    self.monitor.record_task_placement(
+                        "decode_batch", replica.name, "serve", ok=False)
                     report = FailureReport.from_exception(
                         err, task_id=rec.task_id, node=replica.name,
                         pool="serve")
@@ -131,9 +164,15 @@ class WrathServeDriver:
                         failed += b
                         batch_reqs = []
                         break
+                    rec.retry_count += 1
                     replica = (self.cluster.find_node(decision.target_node)
-                               or self.replicas()[0])
+                               or self._pick_replica(rec, exclude=replica.name))
+                    if replica is None:
+                        failed += b
+                        batch_reqs = []
+                        break
                     state = jax.tree.map(lambda x: x, snapshot)  # state recovery
+                    batch_t0 = time.time()  # rescuer is timed from takeover
                     continue
                 snapshot = state
                 nxt = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
@@ -147,6 +186,10 @@ class WrathServeDriver:
                             r.generated.append(int(nxt[i]))
                             tokens += 1
                 t += 1
+            if batch_reqs:
+                self.monitor.record_task_placement(
+                    "decode_batch", replica.name, "serve", ok=True,
+                    duration=time.time() - batch_t0)
             completed += len(batch_reqs)
         return ServeReport(completed=completed, failed=failed,
                            tokens_generated=tokens, recoveries=recoveries,

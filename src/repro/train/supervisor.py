@@ -44,6 +44,7 @@ from repro.core.policy import ResiliencePolicyEngine
 from repro.data import batch_for
 from repro.engine.cluster import Cluster, Node, ResourcePool
 from repro.engine.retry_api import Action, SchedulingContext
+from repro.engine.scheduler import Scheduler
 from repro.engine.task import ResourceSpec, TaskDef, new_task_record
 from repro.models import loss_fn, materialize, param_defs
 from repro.models.config import ModelConfig
@@ -91,6 +92,7 @@ class WrathTrainSupervisor:
         shard_memory_gb: float = 1.0,
         data_seed: int = 0,
         straggler_factor: float = 3.0,
+        scheduler: Scheduler | None = None,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -108,6 +110,12 @@ class WrathTrainSupervisor:
         self.cluster = Cluster([ResourcePool("pod0", nodes)])
         self.monitor = MonitoringDatabase()
         self.policy = ResiliencePolicyEngine()
+        # optional placement policy: when set, shard->host assignment and
+        # speculation targets go through the scheduler interface (None
+        # keeps the legacy fixed-order assignment + EMA-fastest targets)
+        self.scheduler = scheduler.bind(cluster=self.cluster,
+                                        monitor=self.monitor) \
+            if scheduler is not None else None
         self.denylist: set[str] = set()
         self.ckpt = CheckpointManager(ckpt_dir, keep=2, async_save=False)
         self.ckpt_every = ckpt_every
@@ -121,12 +129,37 @@ class WrathTrainSupervisor:
     # ------------------------------------------------------------------ #
     def _ctx(self) -> SchedulingContext:
         return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
-                                 denylist=self.denylist, default_pool="pod0")
+                                 denylist=self.denylist, default_pool="pod0",
+                                 scheduler=self.scheduler)
 
     def healthy_hosts(self) -> list[Node]:
         return [n for n in self.cluster.pools["pod0"].nodes
                 if n.healthy and n.name not in self.denylist
                 and n.name != "bighost"]
+
+    def _order_hosts(self, hosts: list[Node]) -> list[Node]:
+        """Shard->host assignment order for one step.
+
+        With a scheduler bound, hosts are drained through repeated
+        ``select`` calls — ``np.array_split`` hands earlier hosts the
+        larger shards, so e.g. a history-aware scheduler steers the bigger
+        sub-batches onto historically fast hosts.  Without one, pool order
+        is kept (legacy behaviour).
+        """
+        if self.scheduler is None or len(hosts) <= 1:
+            return hosts
+        probe = new_task_record(
+            TaskDef(lambda: None, "grad_shard",
+                    ResourceSpec(memory_gb=self.shard_memory_gb), 0),
+            (), {}, default_retries=0)
+        pool = self.cluster.pools["pod0"]
+        remaining, ordered = list(hosts), []
+        while remaining:
+            pick = self.scheduler.select(probe, remaining, pool=pool)
+            pick = pick if pick is not None else remaining[0]
+            ordered.append(pick)
+            remaining.remove(pick)
+        return ordered
 
     # ------------------------------------------------------------------ #
     def _shard_task(self, step: int, host: Node, params, batch,
@@ -197,7 +230,8 @@ class WrathTrainSupervisor:
 
             inject_nan = any(e.kind == "nan" for e in step_events)
 
-            hosts = self.healthy_hosts() or [self.cluster.find_node("bighost")]
+            hosts = self._order_hosts(
+                self.healthy_hosts() or [self.cluster.find_node("bighost")])
             batch = batch_for(self.cfg, self.global_batch, self.seq_len,
                               step + data_jitter, seed=self.data_seed)
             shards = np.array_split(np.arange(self.global_batch), len(hosts))
@@ -223,7 +257,8 @@ class WrathTrainSupervisor:
                             inject_nan and nshards == 0)
                         dt = time.perf_counter() - t0
                         self.monitor.record_task_placement(
-                            "grad_shard", attempt_host.name, "pod0", ok=True)
+                            "grad_shard", attempt_host.name, "pod0", ok=True,
+                            duration=dt)
                         # straggler detection: EMA of shard times
                         ema = self._host_times.get(attempt_host.name, dt)
                         self._host_times[attempt_host.name] = 0.7 * ema + 0.3 * dt
@@ -231,10 +266,19 @@ class WrathTrainSupervisor:
                         if dt > self.straggler_factor * max(median, 1e-4) \
                                 and len(hosts) > 1:
                             # rung-3 style: speculatively redo on the
-                            # historically fastest host
-                            fastest = min(
-                                (h for h in hosts if h.name != attempt_host.name),
-                                key=lambda h: self._host_times.get(h.name, 1e9))
+                            # historically fastest host (or wherever the
+                            # bound scheduler points)
+                            others = [h for h in hosts
+                                      if h.name != attempt_host.name]
+                            fastest = None
+                            if self.scheduler is not None:
+                                fastest = self.scheduler.select(
+                                    rec, others,
+                                    pool=self.cluster.pools["pod0"])
+                            if fastest is None:
+                                fastest = min(
+                                    others,
+                                    key=lambda h: self._host_times.get(h.name, 1e9))
                             loss, grads = self._shard_task(
                                 step, fastest, params, sub, False)
                             speculations += 1

@@ -3,6 +3,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis")
 from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
@@ -20,10 +22,10 @@ from repro.optim.compress import compress_int8, decompress_int8
 
 @pytest.fixture(scope="module")
 def mesh2d():
-    from repro.launch.mesh import _auto
+    from repro.launch.mesh import make_mesh
     # 1 real device is fine: mesh construction only needs shape (1,1) —
     # use abstract mesh via jax.sharding.Mesh over the single device
-    return jax.make_mesh((1, 1), ("data", "model"), axis_types=_auto(2))
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class FakeMesh:

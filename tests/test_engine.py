@@ -206,7 +206,9 @@ def test_tcp_radio_roundtrip(mon):
         radio.send({"kind": "task_event", "task_id": "t1", "event": "submitted",
                     "data": {"name": "x"}})
         deadline = time.time() + 5
-        while time.time() < deadline and "tcp-node" not in mon.last_heartbeats():
+        while time.time() < deadline and (
+                "tcp-node" not in mon.last_heartbeats()
+                or not mon.events_for("t1")):
             time.sleep(0.01)
         assert "tcp-node" in mon.last_heartbeats()
         assert mon.events_for("t1")

@@ -1,0 +1,307 @@
+"""Scheduler subsystem: pluggable placement, event loop, map backpressure."""
+import threading
+import time
+
+import pytest
+
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core.failures import ResourceStarvationError
+from repro.engine import (
+    Cluster,
+    DataFlowKernel,
+    FeasibilityScheduler,
+    HistoryAwareScheduler,
+    LeastLoadedScheduler,
+    Node,
+    ResourcePool,
+    RoundRobinScheduler,
+    make_scheduler,
+    task,
+)
+from repro.engine.events import EventLoop
+from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+
+
+def _record(name="t", memory_gb=0.5, packages=()):
+    td = TaskDef(lambda: None, name,
+                 ResourceSpec(memory_gb=memory_gb, packages=tuple(packages)), 0)
+    return new_task_record(td, (), {}, default_retries=0)
+
+
+def _hetero_pools():
+    """Heterogeneous 2-pool cluster: small-mem pool + one big/pkg pool."""
+    small = ResourcePool("small", [
+        Node("s0", memory_gb=8), Node("s1", memory_gb=8),
+        Node("s2", memory_gb=64)])
+    big = ResourcePool("big", [
+        Node("b0", memory_gb=512, packages=frozenset({"numpy", "jax", "scipy"}))])
+    return small, big
+
+
+# ------------------------------------------------------------ unit level --
+def test_round_robin_cycles_pool_order():
+    small, big = _hetero_pools()
+    rr = RoundRobinScheduler()
+    picks = [rr.select(_record(), small.nodes, pool=small).name for _ in range(5)]
+    assert picks == ["s0", "s1", "s2", "s0", "s1"]
+    # independent counter per pool, like one counter per executor before
+    assert rr.select(_record(), big.nodes, pool=big).name == "b0"
+    assert rr.select(_record(), small.nodes, pool=small).name == "s2"
+
+
+def test_feasibility_filters_by_spec():
+    small, big = _hetero_pools()
+    fs = FeasibilityScheduler()
+    # 32 GB task: only s2 can ever hold it in the small pool
+    rec = _record(memory_gb=32)
+    assert fs.select(rec, small.nodes, pool=small).name == "s2"
+    assert fs.select(rec, small.nodes, pool=small).name == "s2"
+    # package-constrained task: infeasible everywhere in small -> None
+    rec = _record(packages=("scipy",))
+    assert fs.select(rec, small.nodes, pool=small) is None
+    assert fs.select(rec, big.nodes, pool=big).name == "b0"
+
+
+def test_least_loaded_picks_emptiest_queue():
+    small, _ = _hetero_pools()
+    small.nodes[0].task_queue.put(_record())
+    small.nodes[0].task_queue.put(_record())
+    small.nodes[1].task_queue.put(_record())
+    ll = LeastLoadedScheduler()
+    assert ll.select(_record(), small.nodes, pool=small).name == "s2"
+    small.nodes[2].task_queue.put(_record())
+    small.nodes[2].task_queue.put(_record())
+    small.nodes[2].task_queue.put(_record())
+    assert ll.select(_record(), small.nodes, pool=small).name == "s1"
+
+
+def test_history_aware_explores_then_exploits():
+    small, _ = _hetero_pools()
+    mon = MonitoringDatabase()
+    hs = HistoryAwareScheduler(mon)
+    # no history: unseen nodes are explored round-robin (selection itself
+    # does not write history, so all three stay unseen here)
+    first = [hs.select(_record("u"), small.nodes, pool=small).name
+             for _ in range(4)]
+    assert first == ["s0", "s1", "s2", "s0"]
+    # seed history: s0 fast+reliable, s1 slow, s2 failing
+    for _ in range(4):
+        mon.record_task_placement("u", "s0", "small", ok=True, duration=0.01)
+        mon.record_task_placement("u", "s1", "small", ok=True, duration=1.0)
+        mon.record_task_placement("u", "s2", "small", ok=False)
+    picks = {hs.select(_record("u"), small.nodes, pool=small).name
+             for _ in range(4)}
+    assert picks == {"s0"}
+
+
+def test_make_scheduler_names():
+    for name in ("round_robin", "feasibility", "least_loaded", "history"):
+        assert make_scheduler(name).name == name
+    with pytest.raises(ValueError):
+        make_scheduler("nope")
+
+
+# ------------------------------------------------------------ event loop --
+def test_event_loop_orders_and_cancels():
+    loop = EventLoop().start()
+    try:
+        order = []
+        loop.call_later(0.10, order.append, "late")
+        loop.call_later(0.02, order.append, "early")
+        ev = loop.call_later(0.05, order.append, "never")
+        ev.cancel()
+        loop.call_soon(order.append, "now")
+        deadline = time.time() + 5
+        while len(order) < 3 and time.time() < deadline:
+            time.sleep(0.01)
+        assert order == ["now", "early", "late"]
+    finally:
+        loop.stop()
+
+
+def test_event_loop_periodic_and_exception_isolation():
+    loop = EventLoop().start()
+    try:
+        ticks = []
+
+        def tick():
+            ticks.append(1)
+            raise RuntimeError("must not kill the loop")
+
+        ev = loop.schedule_periodic(0.02, tick, name="tick")
+        deadline = time.time() + 5
+        while len(ticks) < 3 and time.time() < deadline:
+            time.sleep(0.01)
+        assert len(ticks) >= 3
+        ev.cancel()
+        n = len(ticks)
+        time.sleep(0.08)
+        assert len(ticks) <= n + 1  # at most one in-flight firing after cancel
+    finally:
+        loop.stop()
+
+
+def test_no_timer_threads_in_retry_path():
+    """Acceptance: delayed retries flow through the event loop, not Timers."""
+    import inspect
+
+    import repro.engine.dfk as dfk_mod
+
+    assert "threading.Timer(" not in inspect.getsource(dfk_mod)
+
+
+# ------------------------------------------------------------ engine level --
+def test_default_round_robin_parity():
+    """Default scheduler reproduces pre-refactor placements: serialized
+    submissions cycle the pool's healthy nodes in order."""
+    mon = MonitoringDatabase()
+    with DataFlowKernel(Cluster.homogeneous(3), monitor=mon) as dfk:
+        @task
+        def unit(i):
+            return i
+
+        for i in range(6):
+            assert unit(i).result(timeout=10) == i
+        placed = [dfk._assignment[tid][1] for tid in sorted(dfk._assignment)]
+    assert placed == ["default-n000", "default-n001", "default-n002"] * 2
+
+
+@pytest.mark.parametrize("sched_name", ["round_robin", "feasibility",
+                                        "least_loaded", "history"])
+def test_all_schedulers_run_dag_on_hetero_cluster(sched_name):
+    """Each scheduler completes a DAG (with a WRATH-retried OOM) on the
+    heterogeneous two-pool testbed."""
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    mon = MonitoringDatabase()
+    with DataFlowKernel(cluster, monitor=mon,
+                        scheduler=make_scheduler(sched_name),
+                        retry_handler=wrath_retry_handler(),
+                        default_pool="small-mem", default_retries=2) as dfk:
+        @task
+        def f(x):
+            return x + 1
+
+        @task(memory_gb=200)          # only feasible in the big-mem pool
+        def hungry(x):
+            return x * 10
+
+        a = f(1)
+        b = hungry(f(a))
+        assert b.result(timeout=20) == 30
+        assert dfk.stats["completed"] == 3
+
+
+def test_feasibility_scheduler_starves_infeasible_pool():
+    """With no feasible node in the default pool and no retries, the task
+    fails with ResourceStarvationError instead of OOMing at run time."""
+    cluster = Cluster([ResourcePool("p", [Node("n0", memory_gb=8)])])
+    with DataFlowKernel(cluster, scheduler=FeasibilityScheduler(),
+                        default_retries=0) as dfk:
+        @task(memory_gb=100)
+        def big():
+            return 1
+
+        with pytest.raises(ResourceStarvationError):
+            big().result(timeout=10)
+
+
+def test_history_scheduler_avoids_slow_node_end_to_end():
+    nodes = [Node("fast", speed=1.0, workers_per_node=1),
+             Node("slug", speed=0.05, workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    mon = MonitoringDatabase()
+    # pre-seed placement history: slug is 50x slower on this template
+    for _ in range(3):
+        mon.record_task_placement("unit", "fast", "p", ok=True, duration=0.01)
+        mon.record_task_placement("unit", "slug", "p", ok=True, duration=0.5)
+    with DataFlowKernel(cluster, monitor=mon,
+                        scheduler=HistoryAwareScheduler()) as dfk:
+        @task
+        def unit(i):
+            return i
+
+        for i in range(4):
+            assert unit(i).result(timeout=10) == i
+        assert all(node == "fast" for _, node in dfk._assignment.values())
+
+
+def test_map_backpressure_bounds_outstanding():
+    cluster = Cluster.homogeneous(2, workers_per_node=4)
+    peak = {"now": 0, "max": 0}
+    lock = threading.Lock()
+    with DataFlowKernel(cluster) as dfk:
+        @task
+        def step(i):
+            with lock:
+                peak["now"] += 1
+                peak["max"] = max(peak["max"], peak["now"])
+            time.sleep(0.03)
+            with lock:
+                peak["now"] -= 1
+            return i
+
+        futs = dfk.map(step, range(12), max_outstanding=2)
+        assert [f.result(timeout=30) for f in futs] == list(range(12))
+        loads = dfk.executors["default"].loads()
+        assert set(loads) == {"default-n000", "default-n001"}
+        assert all(v == 0 for v in loads.values())  # drained after the sweep
+    assert peak["max"] <= 2
+    assert len(futs) == 12
+
+
+def test_map_unlimited_and_tuple_args():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        @task
+        def add(a, b):
+            return a + b
+
+        futs = dfk.map(add, [(1, 2), (3, 4), (5, 6)])
+        assert [f.result(timeout=10) for f in futs] == [3, 7, 11]
+
+
+def test_map_rejects_bad_cap():
+    with DataFlowKernel(Cluster.homogeneous(1)) as dfk:
+        @task
+        def unit(i):
+            return i
+
+        with pytest.raises(ValueError):
+            dfk.map(unit, range(2), max_outstanding=0)
+
+
+def test_heartbeat_resumed_recorded_once_per_transition():
+    """Regression (satellite): a recovered node awaiting un-denylisting must
+    log heartbeat_resumed once, not on every watcher tick."""
+    mon = MonitoringDatabase()
+    cluster = Cluster.homogeneous(2, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon, heartbeat_period=0.02,
+                        heartbeat_threshold=3) as dfk:
+        victim = cluster.all_nodes()[0]
+        time.sleep(0.1)               # heartbeats flowing
+        dfk.denylist.add(victim.name)  # denylisted but still heartbeating
+        time.sleep(0.3)               # many watcher ticks
+        resumed = [e for e in mon.system_events
+                   if e["event"] == "heartbeat_resumed"
+                   and e["node"] == victim.name]
+        assert len(resumed) == 1
+
+
+def test_heartbeat_resumed_rearms_after_second_outage():
+    """A second lost->resumed cycle while still denylisted must produce a
+    second heartbeat_resumed event (silence re-arms the transition)."""
+    mon = MonitoringDatabase()
+    cluster = Cluster.homogeneous(1, workers_per_node=1)
+    dfk = DataFlowKernel(cluster, monitor=mon, heartbeat_period=0.02,
+                         heartbeat_threshold=3)
+    node = cluster.all_nodes()[0].name
+    dfk.denylist.add(node)
+    mon.heartbeat(node, time.time())
+    dfk._check_heartbeats()
+    dfk._check_heartbeats()            # still only one resume transition
+    mon.heartbeat(node, time.time() - 999)   # silent again while denylisted
+    dfk._check_heartbeats()
+    mon.heartbeat(node, time.time())         # resumes a second time
+    dfk._check_heartbeats()
+    resumed = [e for e in mon.system_events
+               if e["event"] == "heartbeat_resumed" and e["node"] == node]
+    assert len(resumed) == 2

@@ -2,12 +2,10 @@
 from __future__ import annotations
 
 import statistics
-import time
 from typing import Any, Callable
 
 from repro.apps import run_app
 from repro.core import MonitoringDatabase, wrath_retry_handler
-from repro.engine import Cluster
 
 
 def repeated(fn: Callable[[int], Any], repeats: int) -> list[Any]:
@@ -26,8 +24,11 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
 
 def run_once(app: str, *, mode: str, injector, cluster_fn, default_pool,
              scale: str = "tiny", retries: int = 2, timeout: float = 120.0):
-    handler = wrath_retry_handler() if mode == "wrath" else None
+    """One app run in ``mode``: "baseline" (Parsl default retry), "wrath"
+    (reactive resilience module) or "proactive" (wrath + sentinel)."""
+    handler = wrath_retry_handler() if mode in ("wrath", "proactive") else None
     return run_app(app, cluster_fn(), retry_handler=handler,
                    monitor=MonitoringDatabase(), injector=injector,
+                   proactive=mode == "proactive",
                    scale=scale, default_pool=default_pool,
                    default_retries=retries, wait_timeout=timeout)

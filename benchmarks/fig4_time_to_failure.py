@@ -3,6 +3,23 @@
 WRATH identifies destined-to-fail tasks and fails fast; baseline burns
 retries first.  Reported value = TTF(WRATH) / TTF(baseline) (< 1 is
 better; paper: 0.5–0.8).
+
+**Proactive mode** (``run_proactive`` / the trailing rows of ``run``)
+compares the proactive plane against *reactive WRATH* itself on the
+failure types where reacting is not enough:
+
+* ``worker_killed`` — deterministic framework failures on a single-pool
+  cluster: the reactive fail-fast heuristic needs recurrence across >= 2
+  pools, so it burns the full retry budget; the sentinel's failure-streak
+  rule cuts the last retry;
+* ``memory`` — requirements that fit no node in the cluster: reactive
+  WRATH needs the first OOM to manifest before rung analysis fails the
+  task; the sentinel's predictive fast-fail kills it at dispatch.
+
+The metric is the mean per-task time-to-failure (first dispatch ->
+terminal, so dependency wait and JIT warm-up of unrelated parents are not
+billed) of the destined tasks, normalized proactive/reactive (< 1 =
+proactive wins).
 """
 from __future__ import annotations
 
@@ -12,6 +29,8 @@ from repro.injection import FailureInjector
 
 APPS = ("mapreduce", "cholesky", "docking", "moldesign", "fedlearn")
 FAILURES = ("zero_division", "exception", "worker_killed", "dependency")
+# failure types where the proactive plane beats reactive WRATH
+PROACTIVE_FAILURES = ("worker_killed", "memory")
 
 
 def run(repeats: int = 3, rate: float = 0.3) -> list[str]:
@@ -43,4 +62,56 @@ def run(repeats: int = 3, rate: float = 0.3) -> list[str]:
             else:
                 rows.append(csv_row(f"fig4_ttf_{app}_{failure}", 0.0,
                                     "no_failures_triggered"))
+    rows.extend(run_proactive(repeats=repeats, rate=rate))
+    return rows
+
+
+def _warmup() -> None:
+    """Throwaway runs: JIT compilation and thread/loop spin-up costs must
+    not be billed to whichever measured mode happens to run first."""
+    for app in APPS:
+        run_once(app, mode="wrath", injector=None,
+                 cluster_fn=lambda: Cluster.homogeneous(4), default_pool=None)
+    inj = FailureInjector("worker_killed", rate=0.3, seed=99, app_tag="warmup")
+    run_once("mapreduce", mode="proactive", injector=inj,
+             cluster_fn=lambda: Cluster.homogeneous(4), default_pool=None)
+
+
+def run_proactive(repeats: int = 3, rate: float = 0.3) -> list[str]:
+    """Proactive plane vs reactive WRATH: per-task normalized TTF."""
+    rows: list[str] = []
+    all_ratios: list[float] = []
+    _warmup()
+    for app in APPS:
+        for failure in PROACTIVE_FAILURES:
+            ratios, pro_ttfs = [], []
+            for r in range(repeats):
+                tag = f"{app}:pro:{failure}:{r}"
+                inj_p = FailureInjector(failure, rate=rate, seed=r, app_tag=tag)
+                rp = run_once(app, mode="proactive", injector=inj_p,
+                              cluster_fn=lambda: Cluster.homogeneous(4),
+                              default_pool=None)
+                inj_w = FailureInjector(failure, rate=rate, seed=r, app_tag=tag)
+                rw = run_once(app, mode="wrath", injector=inj_w,
+                              cluster_fn=lambda: Cluster.homogeneous(4),
+                              default_pool=None)
+                tp = rp.extra.get("ttf_per_task_mean")
+                tw = rw.extra.get("ttf_per_task_mean")
+                if tp and tw:
+                    ratios.append(tp / tw)
+                    pro_ttfs.append(tp)
+            if ratios:
+                m, sem = mean_sem(ratios)
+                all_ratios.extend(ratios)
+                ttf_m, _ = mean_sem(pro_ttfs)
+                rows.append(csv_row(
+                    f"fig4_proactive_{app}_{failure}", ttf_m * 1e6,
+                    f"normalized_ttf={m:.3f}±{sem:.3f}"))
+            else:
+                rows.append(csv_row(f"fig4_proactive_{app}_{failure}", 0.0,
+                                    "no_failures_triggered"))
+    if all_ratios:
+        m, sem = mean_sem(all_ratios)
+        rows.append(csv_row("fig4_proactive_aggregate", 0.0,
+                            f"normalized_ttf={m:.3f}±{sem:.3f}"))
     return rows

@@ -2,6 +2,10 @@
 
 Failure rate 0.1 of resolvable (memory) failures on the heterogeneous
 testbed; overhead = time spent in WRATH analysis/decisions / makespan.
+The ``proactive`` rows run the same workload with the sentinel attached
+(its dispatch checks, retry reviews and periodic sweeps are all counted
+into the overhead) — the acceptance bar is staying within 2x of the
+reactive overhead ratio.
 """
 from __future__ import annotations
 
@@ -12,26 +16,52 @@ from repro.injection import FailureInjector
 APPS = ("mapreduce", "cholesky", "docking", "moldesign", "fedlearn")
 
 
-def run(repeats: int = 3, rate: float = 0.1) -> list[str]:
+def run(repeats: int = 5, rate: float = 0.1) -> list[str]:
     rows: list[str] = []
+    pooled: dict[str, list[float]] = {"wrath": [], "proactive": []}
     for app in APPS:
-        overheads, makespans = [], []
-        for r in range(repeats):
-            inj = FailureInjector("memory", rate=rate, seed=r,
-                                  app_tag=f"f5:{app}:{r}")
-            res = run_once(
-                app, mode="wrath", injector=inj,
-                cluster_fn=lambda: Cluster.paper_testbed(small_nodes=3,
-                                                         big_nodes=1),
-                default_pool="small-mem", retries=3)
-            if res.success:
-                overheads.append(res.overhead_ratio)
-                makespans.append(res.makespan)
-        if overheads:
-            m, sem = mean_sem(overheads)
-            mk, _ = mean_sem(makespans)
-            rows.append(csv_row(f"fig5_overhead_{app}", mk * 1e6,
-                                f"overhead_ratio={m:.5f}±{sem:.5f}"))
-        else:
-            rows.append(csv_row(f"fig5_overhead_{app}", 0.0, "no_successful_runs"))
+        # throwaway warm-up: JIT compiles and thread spin-up must not
+        # inflate the first measured mode's makespan (which would deflate
+        # its overhead ratio and skew the reactive/proactive comparison)
+        run_once(app, mode="proactive",
+                 injector=FailureInjector("memory", rate=rate, seed=9,
+                                          app_tag=f"f5:warmup:{app}"),
+                 cluster_fn=lambda: Cluster.paper_testbed(small_nodes=3,
+                                                          big_nodes=1),
+                 default_pool="small-mem", retries=3)
+        for mode in ("wrath", "proactive"):
+            overheads, makespans = [], []
+            for r in range(repeats):
+                inj = FailureInjector("memory", rate=rate, seed=r,
+                                      app_tag=f"f5:{app}:{r}")
+                res = run_once(
+                    app, mode=mode, injector=inj,
+                    cluster_fn=lambda: Cluster.paper_testbed(small_nodes=3,
+                                                             big_nodes=1),
+                    default_pool="small-mem", retries=3)
+                if res.success:
+                    overheads.append(res.overhead_ratio)
+                    makespans.append(res.makespan)
+            pooled[mode].extend(overheads)
+            tag = "" if mode == "wrath" else "_proactive"
+            if overheads:
+                m, sem = mean_sem(overheads)
+                mk, _ = mean_sem(makespans)
+                rows.append(csv_row(f"fig5_overhead{tag}_{app}", mk * 1e6,
+                                    f"overhead_ratio={m:.5f}±{sem:.5f}"))
+            else:
+                rows.append(csv_row(f"fig5_overhead{tag}_{app}", 0.0,
+                                    "no_successful_runs"))
+    if pooled["wrath"] and pooled["proactive"]:
+        # pooled across apps: per-app ratios of sub-1% numbers on ~20ms
+        # makespans are noise-bound (a single GC/compile stall inside one
+        # timed handler window dwarfs the signal), so the acceptance bar
+        # (proactive within 2x of reactive) reads off pooled *medians*
+        import statistics
+        mw = statistics.median(pooled["wrath"])
+        mp = statistics.median(pooled["proactive"])
+        rows.append(csv_row(
+            "fig5_overhead_proactive_vs_wrath", 0.0,
+            f"pooled_median_ratio={mp / max(mw, 1e-9):.3f};"
+            f"wrath={mw:.5f};proactive={mp:.5f}"))
     return rows

@@ -8,7 +8,6 @@ baseline↔optimized comparison is apples-to-apples.
 from __future__ import annotations
 
 import json
-import sys
 from pathlib import Path
 
 HERE = Path(__file__).resolve().parent

@@ -22,6 +22,7 @@ from benchmarks import (
 
 SUITES = {
     "fig4": fig4_time_to_failure.run,
+    "fig4_proactive": fig4_time_to_failure.run_proactive,
     "fig5": fig5_overhead.run,
     "table4": table4_success_rates.run,
     "fig6": fig6_scalability.run,

@@ -57,13 +57,21 @@ def run_app(
     retry_handler=None,
     monitor=None,
     injector=None,
+    proactive: bool = False,
     scale: str = "small",
     default_pool: str | None = None,
     default_retries: int = 2,
     wait_timeout: float = 300.0,
     **app_kwargs: Any,
 ) -> AppRunResult:
-    """Execute one application run and collect the §VII-A metrics."""
+    """Execute one application run and collect the §VII-A metrics.
+
+    ``proactive=True`` attaches the :class:`~repro.core.proactive.
+    ProactiveSentinel` to the DFK (predictive fast-fail + node drain); the
+    per-task time-to-failure of terminally failed tasks is reported in
+    ``extra["ttf_per_task_mean"]`` either way, so reactive and proactive
+    runs are directly comparable (fig 4's normalized TTF).
+    """
     injector = injector or NoInjector()
     submit = APPS[app]
     t0 = time.time()
@@ -73,6 +81,7 @@ def run_app(
     with DataFlowKernel(
         cluster, retry_handler=retry_handler, monitor=monitor,
         default_pool=default_pool, default_retries=default_retries,
+        proactive=proactive,
     ) as dfk:
         futures = submit(injector=injector, scale=scale, **app_kwargs)
         for f in futures:
@@ -89,6 +98,11 @@ def run_app(
         rates = dfk.success_rates()
         overhead = dfk.stats["wrath_overhead_s"] / makespan if makespan > 0 else 0.0
         stats = dict(dfk.stats)
+        task_ttfs = dfk.failed_task_ttfs()
+    extra: dict[str, Any] = {}
+    if task_ttfs:
+        extra["ttf_per_task_mean"] = sum(task_ttfs) / len(task_ttfs)
+        extra["failed_tasks"] = len(task_ttfs)
     return AppRunResult(
         app=app, success=success, makespan=makespan, time_to_failure=ttf,
         error=error, stats=stats,
@@ -96,4 +110,5 @@ def run_app(
         retry_success_rate=rates["retry_success_rate"],
         overhead_ratio=overhead,
         injected=getattr(injector, "count", 0),
+        extra=extra,
     )

@@ -24,7 +24,7 @@ import shutil
 import threading
 import time
 from pathlib import Path
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import numpy as np
@@ -119,7 +119,7 @@ def load_checkpoint(path: str | Path, tree_like: Any, *,
             shards[si] = np.load(path / f"shard_{si:05d}.npz")
         arr = shards[si][info["npz_key"]]
         if str(arr.dtype) != info["dtype"]:
-            import ml_dtypes  # shipped with jax
+            import ml_dtypes  # noqa: F401 - registers bf16/fp8 dtypes
 
             arr = arr.view(np.dtype(info["dtype"]))
         return arr
@@ -148,6 +148,10 @@ class CheckpointManager:
         self.keep = keep
         self.async_save = async_save
         self._pending: threading.Thread | None = None
+        # exception raised by the async writer thread, surfaced to the
+        # caller on the next wait()/save()/restore_latest() instead of
+        # dying silently in a daemon thread
+        self._async_error: BaseException | None = None
 
     # ------------------------------------------------------------------ #
     def steps(self) -> list[int]:
@@ -165,16 +169,32 @@ class CheckpointManager:
             self._retain()
 
         if self.async_save:
-            self.wait()
-            self._pending = threading.Thread(target=do, daemon=True)
+            self.wait()  # re-raises a previous async failure before queuing more
+
+            def do_async():
+                try:
+                    do()
+                except BaseException as e:  # noqa: BLE001 - surfaced on wait()
+                    self._async_error = e
+
+            self._pending = threading.Thread(target=do_async, daemon=True)
             self._pending.start()
         else:
             do()
 
     def wait(self) -> None:
+        """Block until the pending async save finishes.
+
+        Re-raises any exception the writer thread hit — a failed
+        checkpoint must not be discovered only at restore time.
+        """
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._async_error is not None:
+            err = self._async_error
+            self._async_error = None
+            raise err
 
     def _retain(self) -> None:
         steps = self.steps()

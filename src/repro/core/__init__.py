@@ -20,6 +20,7 @@ _EXPORTS = {
     "MonitorLossError": "repro.core.failures",
     "ManagerLossError": "repro.core.failures",
     "WorkerLostError": "repro.core.failures",
+    "TaskCancelledError": "repro.core.failures",
     "DependencyError": "repro.core.failures",
     "ResourceStarvationError": "repro.core.failures",
     "UlimitExceededError": "repro.core.failures",
@@ -36,6 +37,9 @@ _EXPORTS = {
     "TABLE_I": "repro.core.taxonomy",
     # monitoring
     "MonitoringDatabase": "repro.core.monitoring",
+    "StreamingStats": "repro.core.monitoring",
+    "NodeHealth": "repro.core.monitoring",
+    "TemplateProfile": "repro.core.monitoring",
     "Radio": "repro.core.monitoring",
     "InProcRadio": "repro.core.monitoring",
     "TCPRadio": "repro.core.monitoring",
@@ -49,6 +53,10 @@ _EXPORTS = {
     "Placement": "repro.core.retry",
     "ResiliencePolicyEngine": "repro.core.policy",
     "wrath_retry_handler": "repro.core.policy",
+    # proactive resilience plane
+    "ProactiveConfig": "repro.core.proactive",
+    "ProactiveDecision": "repro.core.proactive",
+    "ProactiveSentinel": "repro.core.proactive",
 }
 
 __all__ = sorted(_EXPORTS)

@@ -28,7 +28,6 @@ from typing import Any
 from repro.core.failures import (
     DependencyError,
     FailureReport,
-    Layer,
     Retriable,
 )
 from repro.core.taxonomy import DEFAULT_FTL, FailureTaxonomyLibrary, TaxonomyEntry

@@ -73,6 +73,18 @@ class WorkerLostError(WrathFailure):
     layer = Layer.FRAMEWORK
 
 
+class TaskCancelledError(WrathFailure):
+    """The framework cancelled the task before/while it ran.
+
+    Raised into the task's future by the proactive plane's predictive
+    fast-fail and by explicit :meth:`DataFlowKernel.cancel_task` — a
+    *decision*, not a manifestation, so it never re-enters the retry
+    handler.
+    """
+
+    layer = Layer.FRAMEWORK
+
+
 class DependencyError(WrathFailure):
     """A task failed because one of its parent tasks failed.
 

@@ -1,11 +1,21 @@
-"""Hierarchical monitoring system (paper §IV).
+"""Hierarchical monitoring system (paper §IV) — the *streaming* half of the
+proactive resilience plane.
 
 Components:
 
 * :class:`MonitoringDatabase` — the centralized monitoring database that
   consolidates task events, failure reports, heartbeats, resource profiles
   and placement history, and answers the queries the resilience module
-  needs (e.g. "where has this task historically succeeded?").
+  needs.  Since the proactive refactor the database no longer hoards raw
+  append-only lists: observations stream into bounded ring buffers and into
+  *online* per-task-template profiles (:class:`StreamingStats`, Welford
+  mean/variance plus a bounded-sample p95) keyed overall, by node and by
+  pool, and into per-node health trends (:class:`NodeHealth`: heartbeat
+  jitter, memory-growth slope).  The query side — ``expected_duration``,
+  ``node_health``, ``duration_stats`` — is what the
+  :class:`~repro.core.proactive.ProactiveSentinel`, the straggler watcher,
+  the training supervisor's shard sizing and the serve driver's replica
+  health gate consume.
 * :class:`Radio` — the communication radio.  :class:`InProcRadio` delivers
   messages in-process; :class:`TCPRadio`/:class:`TCPRadioServer` implement
   the paper's TCP transport (JSON lines over a socket) and are exercised by
@@ -15,16 +25,21 @@ Components:
 * :class:`TaskMonitoringAgent` — per-node agent sampling resource usage of
   the running workers (psutil-based, as §VI-B) plus simulated node state.
 * :class:`SystemMonitoringAgent` — heartbeat emitter for any component.
+
+Memory bounds: every store (task events per task, system events, failure
+reports, resource profiles per node, heartbeat-interval samples) is a ring
+capped at ``retention`` entries; streaming profiles are O(1) per key.
 """
 from __future__ import annotations
 
 import json
+import math
 import socket
 import socketserver
 import threading
 import time
-from collections import defaultdict
-from dataclasses import asdict, dataclass, is_dataclass
+from collections import defaultdict, deque
+from dataclasses import asdict, dataclass, field, is_dataclass
 from typing import Any
 
 try:
@@ -117,6 +132,124 @@ class TCPRadio(Radio):
 
 
 # --------------------------------------------------------------------------
+# Streaming statistics
+# --------------------------------------------------------------------------
+
+
+class StreamingStats:
+    """Online mean/variance (Welford) plus a bounded-sample p95 estimate.
+
+    O(1) per observation, O(``sample_cap``) memory: the exact quantile of
+    the last ``sample_cap`` observations stands in for the stream p95 —
+    recency is a feature here (node speed and task mix drift).
+    """
+
+    __slots__ = ("n", "_mean", "_m2", "_min", "_max", "_samples", "_sorted")
+
+    def __init__(self, sample_cap: int = 64) -> None:
+        self.n = 0
+        self._mean = 0.0
+        self._m2 = 0.0
+        self._min = math.inf
+        self._max = -math.inf
+        self._samples: deque[float] = deque(maxlen=sample_cap)
+        # sorted view of _samples, rebuilt lazily — quantile() is on the
+        # straggler watcher's periodic path, so it must not re-sort unless
+        # a new observation arrived
+        self._sorted: list[float] | None = None
+
+    def push(self, x: float) -> None:
+        x = float(x)
+        self.n += 1
+        d = x - self._mean
+        self._mean += d / self.n
+        self._m2 += d * (x - self._mean)
+        self._min = min(self._min, x)
+        self._max = max(self._max, x)
+        self._samples.append(x)
+        self._sorted = None
+
+    @property
+    def mean(self) -> float:
+        return self._mean if self.n else 0.0
+
+    @property
+    def var(self) -> float:
+        return self._m2 / (self.n - 1) if self.n > 1 else 0.0
+
+    @property
+    def std(self) -> float:
+        return math.sqrt(self.var)
+
+    @property
+    def min(self) -> float:
+        return self._min if self.n else 0.0
+
+    @property
+    def max(self) -> float:
+        return self._max if self.n else 0.0
+
+    def quantile(self, q: float) -> float:
+        """Quantile over the retained sample window (0 if empty)."""
+        if not self._samples:
+            return 0.0
+        xs = self._sorted
+        if xs is None:
+            xs = self._sorted = sorted(self._samples)
+        idx = min(len(xs) - 1, max(0, int(math.ceil(q * len(xs))) - 1))
+        return xs[idx]
+
+    @property
+    def p95(self) -> float:
+        return self.quantile(0.95)
+
+    def snapshot(self) -> dict[str, float]:
+        return {"n": self.n, "mean": self.mean, "std": self.std,
+                "min": self.min, "max": self.max, "p95": self.p95}
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (f"<StreamingStats n={self.n} mean={self.mean:.4g} "
+                f"std={self.std:.4g} p95={self.p95:.4g}>")
+
+
+@dataclass
+class TemplateProfile:
+    """Streaming per-task-template profile: duration and memory."""
+
+    duration: StreamingStats = field(default_factory=StreamingStats)
+    memory_gb: StreamingStats = field(default_factory=StreamingStats)
+
+
+@dataclass
+class NodeHealth:
+    """Point-in-time health trend of one node (query-side snapshot)."""
+
+    node: str
+    last_heartbeat: float = 0.0          # wall-clock ts of last beat (0 = never)
+    heartbeat_mean_interval: float = 0.0
+    heartbeat_jitter: float = 0.0        # std of inter-heartbeat intervals
+    heartbeat_samples: int = 0
+    mem_in_use_gb: float = 0.0
+    mem_capacity_gb: float = 0.0
+    mem_slope_gb_s: float = 0.0          # least-squares slope of recent samples
+    profile_samples: int = 0
+
+    def silent_for(self, now: float | None = None) -> float:
+        if not self.last_heartbeat:
+            return 0.0
+        return max(0.0, (now if now is not None else time.time()) - self.last_heartbeat)
+
+    def projected_mem_gb(self, horizon_s: float) -> float:
+        """Memory in use projected ``horizon_s`` ahead along the trend."""
+        return self.mem_in_use_gb + max(self.mem_slope_gb_s, 0.0) * horizon_s
+
+    def trending_oom(self, horizon_s: float) -> bool:
+        return (self.mem_capacity_gb > 0 and self.profile_samples >= 3
+                and self.mem_slope_gb_s > 0
+                and self.projected_mem_gb(horizon_s) > self.mem_capacity_gb)
+
+
+# --------------------------------------------------------------------------
 # Centralized monitoring database
 # --------------------------------------------------------------------------
 
@@ -145,15 +278,32 @@ class PlacementStats:
 
 
 class MonitoringDatabase:
-    """Thread-safe centralized store + query API (paper §IV)."""
+    """Thread-safe centralized store + query API (paper §IV).
 
-    def __init__(self) -> None:
+    ``retention`` bounds every ring store (events, failures, per-node
+    profile samples); streaming profiles are O(1) per (template, node/pool).
+    """
+
+    def __init__(self, retention: int = 512) -> None:
+        if retention < 1:
+            raise ValueError(f"retention must be >= 1, got {retention}")
+        self.retention = retention
         self._lock = threading.RLock()
-        self.task_events: dict[str, list[dict[str, Any]]] = defaultdict(list)
-        self.system_events: list[dict[str, Any]] = []
-        self.failures: list[FailureReport] = []
+        self.task_events: dict[str, deque[dict[str, Any]]] = defaultdict(
+            lambda: deque(maxlen=retention))
+        self.system_events: deque[dict[str, Any]] = deque(maxlen=retention)
+        self.failures: deque[FailureReport] = deque(maxlen=retention)
         self._heartbeats: dict[str, float] = {}
-        self.resource_profiles: dict[str, list[dict[str, float]]] = defaultdict(list)
+        self._hb_intervals: dict[str, StreamingStats] = defaultdict(
+            lambda: StreamingStats(sample_cap=32))
+        self.resource_profiles: dict[str, deque[dict[str, float]]] = defaultdict(
+            lambda: deque(maxlen=retention))
+        # streaming per-template profiles: overall + per-node + per-pool
+        self._profiles: dict[str, TemplateProfile] = defaultdict(TemplateProfile)
+        self._node_profiles: dict[tuple[str, str], TemplateProfile] = defaultdict(
+            TemplateProfile)
+        self._pool_profiles: dict[tuple[str, str], TemplateProfile] = defaultdict(
+            TemplateProfile)
         # placement history keyed by task *name* (template), then node/pool
         self._node_history: dict[str, dict[str, PlacementStats]] = defaultdict(
             lambda: defaultdict(PlacementStats))
@@ -175,18 +325,29 @@ class MonitoringDatabase:
         elif kind == "placement":
             self.record_task_placement(message["task_name"], message["node"],
                                        message["pool"], ok=message["ok"],
-                                       duration=message.get("duration"))
+                                       duration=message.get("duration"),
+                                       memory_gb=message.get("memory_gb"))
         elif kind == "failure":
+            # full-fidelity round trip: everything serialize_report ships is
+            # preserved so a TCP-radio report equals an in-proc one
             d = message.get("report", {})
-            self.failures.append(FailureReport(
+            self.report_failure(FailureReport(
                 task_id=d.get("task_id"), exception=None,
                 exception_type=d.get("exception_type", ""),
                 message=d.get("message", ""), node=d.get("node"),
-                pool=d.get("pool")))
+                pool=d.get("pool"), worker=d.get("worker"),
+                resource_profile=dict(d.get("resource_profile") or {}),
+                requirements=dict(d.get("requirements") or {}),
+                retry_count=int(d.get("retry_count", 0)),
+                timestamp=float(d.get("timestamp", 0.0)),
+                log_tail=list(d.get("log_tail") or [])))
 
     # -- writers -----------------------------------------------------------
     def heartbeat(self, node: str, ts: float) -> None:
         with self._lock:
+            last = self._heartbeats.get(node)
+            if last is not None and ts > last:
+                self._hb_intervals[node].push(ts - last)
             self._heartbeats[node] = ts
 
     def record_task_event(self, task_id: str, event: str, **data: Any) -> None:
@@ -201,12 +362,10 @@ class MonitoringDatabase:
     def record_resource_profile(self, node: str, profile: dict[str, float]) -> None:
         with self._lock:
             self.resource_profiles[node].append({"time": time.time(), **profile})
-            # bound memory: keep last 512 samples per node
-            if len(self.resource_profiles[node]) > 512:
-                del self.resource_profiles[node][:-512]
 
     def record_task_placement(self, task_name: str, node: str, pool: str | None,
-                              *, ok: bool, duration: float | None = None) -> None:
+                              *, ok: bool, duration: float | None = None,
+                              memory_gb: float | None = None) -> None:
         with self._lock:
             ns = self._node_history[task_name][node]
             ps = self._pool_history[task_name][pool or "?"]
@@ -217,6 +376,15 @@ class MonitoringDatabase:
                     for s in (ns, ps):
                         s.duration_sum += duration
                         s.duration_n += 1
+                    for prof in (self._profiles[task_name],
+                                 self._node_profiles[(task_name, node)],
+                                 self._pool_profiles[(task_name, pool or "?")]):
+                        prof.duration.push(duration)
+                if memory_gb is not None and memory_gb > 0:
+                    for prof in (self._profiles[task_name],
+                                 self._node_profiles[(task_name, node)],
+                                 self._pool_profiles[(task_name, pool or "?")]):
+                        prof.memory_gb.push(memory_gb)
             else:
                 ns.failures += 1
                 ps.failures += 1
@@ -266,6 +434,83 @@ class MonitoringDatabase:
     def events_for(self, task_id: str) -> list[dict[str, Any]]:
         with self._lock:
             return list(self.task_events[task_id])
+
+    # -- streaming-profile queries (proactive plane) -----------------------
+    def duration_stats(self, task_name: str, *, node: str | None = None,
+                       pool: str | None = None) -> StreamingStats | None:
+        """Streaming duration profile of a task template (None = no data).
+
+        ``node``/``pool`` narrow the profile to one placement key; at most
+        one of the two may be given.
+        """
+        with self._lock:
+            if node is not None:
+                prof = self._node_profiles.get((task_name, node))
+            elif pool is not None:
+                prof = self._pool_profiles.get((task_name, pool))
+            else:
+                prof = self._profiles.get(task_name)
+            return prof.duration if prof is not None and prof.duration.n else None
+
+    def memory_stats(self, task_name: str, *, node: str | None = None,
+                     pool: str | None = None) -> StreamingStats | None:
+        with self._lock:
+            if node is not None:
+                prof = self._node_profiles.get((task_name, node))
+            elif pool is not None:
+                prof = self._pool_profiles.get((task_name, pool))
+            else:
+                prof = self._profiles.get(task_name)
+            return prof.memory_gb if prof is not None and prof.memory_gb.n else None
+
+    def expected_duration(self, task_name: str, *, node: str | None = None,
+                          min_samples: int = 3) -> float:
+        """Profile-derived duration bound for straggler detection.
+
+        Returns the p95 of observed successful durations (0.0 when fewer
+        than ``min_samples`` observations exist) — the dynamic replacement
+        for the static user-supplied ``est_duration_s``.
+        """
+        stats = self.duration_stats(task_name, node=node)
+        if stats is None or stats.n < min_samples:
+            return 0.0
+        return stats.p95
+
+    def node_health(self, node: str) -> NodeHealth:
+        """Heartbeat-trend + memory-trend snapshot for one node."""
+        with self._lock:
+            h = NodeHealth(node=node,
+                           last_heartbeat=self._heartbeats.get(node, 0.0))
+            hb = self._hb_intervals.get(node)
+            if hb is not None and hb.n:
+                h.heartbeat_mean_interval = hb.mean
+                h.heartbeat_jitter = hb.std
+                h.heartbeat_samples = hb.n
+            rows = self.resource_profiles.get(node)
+            if rows:
+                recent = list(rows)[-32:]
+                mem = [(r["time"], r.get("sim_mem_in_use_gb", 0.0))
+                       for r in recent]
+                h.mem_in_use_gb = mem[-1][1]
+                h.mem_capacity_gb = recent[-1].get("sim_mem_capacity_gb", 0.0)
+                h.profile_samples = len(mem)
+                if len(mem) >= 3:
+                    t0 = mem[0][0]
+                    xs = [t - t0 for t, _ in mem]
+                    ys = [m for _, m in mem]
+                    n = len(xs)
+                    mx = sum(xs) / n
+                    my = sum(ys) / n
+                    denom = sum((x - mx) ** 2 for x in xs)
+                    if denom > 1e-12:
+                        h.mem_slope_gb_s = sum(
+                            (x - mx) * (y - my) for x, y in zip(xs, ys)) / denom
+            return h
+
+    def all_node_health(self) -> dict[str, NodeHealth]:
+        with self._lock:
+            nodes = set(self._heartbeats) | set(self.resource_profiles)
+        return {n: self.node_health(n) for n in nodes}
 
 
 # --------------------------------------------------------------------------

@@ -121,12 +121,21 @@ class ResiliencePolicyEngine:
 
     # ------------------------------------------------------------------ #
     def _refresh_denylist(self, ctx: SchedulingContext) -> None:
-        """HTCondor-style: resources resuming communication leave the list."""
+        """HTCondor-style: resources resuming communication leave the list.
+
+        Nodes the proactive sentinel *drained* are exempt: a draining node
+        typically still heartbeats (the drain fired on a trend, before hard
+        loss), so the resume rule would immediately re-admit it.  The
+        sentinel owns the drained lifecycle and un-denylists on recovery.
+        """
         if ctx.monitor is None:
             return
         now = time.time()
         beats = ctx.monitor.last_heartbeats()
+        drained = getattr(ctx, "drained", None) or set()
         for node in list(ctx.denylist):
+            if node in drained:
+                continue
             last = beats.get(node)
             if last is not None and now - last < self.heartbeat_resume_window:
                 node_obj = ctx.cluster.find_node(node)

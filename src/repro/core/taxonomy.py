@@ -13,7 +13,7 @@ rules for failure categorization").
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Type
 
 from repro.core.failures import (

@@ -35,7 +35,7 @@ from repro.core.failures import (
     UlimitExceededError,
     WorkerLostError,
 )
-from repro.engine.task import TaskRecord
+from repro.engine.task import TaskRecord, TaskState
 
 # thread-local handle letting task code discover which node it runs on
 # (used by ``simwork`` for speed-scaled sleeps, and by tests)
@@ -111,6 +111,32 @@ class Node:
     def restore_hardware(self) -> None:
         self.healthy = True
 
+    def remove_queued(self, task_id: str) -> TaskRecord | None:
+        """Pull one queued (not yet picked up) record off this node's queue.
+
+        The real-cancellation primitive of the proactive plane: a queued
+        task can be preempted/cancelled without ever running.  Returns the
+        removed record, or ``None`` if no queued record matches (e.g. a
+        worker grabbed it first — callers fall back to the running-task
+        path).  Best-effort under concurrency: records drained while
+        scanning are requeued in order.
+        """
+        kept: list[TaskRecord | None] = []
+        removed: TaskRecord | None = None
+        while True:
+            try:
+                rec = self.task_queue.get_nowait()
+            except queue.Empty:
+                break
+            if (removed is None and rec is not None
+                    and rec.task_id == task_id):
+                removed = rec
+            else:
+                kept.append(rec)
+        for rec in kept:
+            self.task_queue.put(rec)
+        return removed
+
 
 @dataclass
 class ResourcePool:
@@ -161,6 +187,10 @@ class Worker:
             if rec is None:  # poison pill
                 self.alive = False
                 break
+            if rec.cancel_requested:
+                # cancelled while queued: drop without executing — the DFK
+                # already resolved (or re-dispatched) the task
+                continue
             self.busy = True
             try:
                 self._run_one(rec)
@@ -172,6 +202,10 @@ class Worker:
         node = self.node
         spec = rec.effective_resources()
         rec.start_time = time.time()
+        # task-state lifecycle: the worker, not the executor, marks RUNNING —
+        # the straggler watcher and node-loss sweep key off this transition
+        if rec.state in (TaskState.SCHEDULED, TaskState.RETRYING):
+            rec.state = TaskState.RUNNING
         err: BaseException | None = None
         result: Any = None
         try:
@@ -224,6 +258,7 @@ class NodeManager:
         self.heartbeat = heartbeat
         self.heartbeat_period = heartbeat_period
         self._stop = threading.Event()
+        self._hb_paused = threading.Event()
         self._hb_thread = threading.Thread(
             target=self._hb_loop, name=f"hb-{node.name}", daemon=True)
 
@@ -254,10 +289,22 @@ class NodeManager:
             n += 1
         return n
 
+    def cancel(self, task_id: str) -> TaskRecord | None:
+        """Remove a queued task from this node (real cancellation path)."""
+        return self.node.remove_queued(task_id)
+
+    def pause_heartbeats(self) -> None:
+        """Silence the heartbeat while workers keep running — the 'node
+        trending toward silence' scenario the proactive drain detects."""
+        self._hb_paused.set()
+
+    def resume_heartbeats(self) -> None:
+        self._hb_paused.clear()
+
     def _hb_loop(self) -> None:
         while not self._stop.is_set():
             if self.node.healthy:
-                if self.heartbeat is not None:
+                if self.heartbeat is not None and not self._hb_paused.is_set():
                     self.heartbeat(self.node.name, time.time())
                 # pilot-job managers track worker processes and respawn the
                 # dead (tasks queued behind a killed worker must not orphan)

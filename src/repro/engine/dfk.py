@@ -14,22 +14,31 @@ subsystems:
   pre-refactor dispatch placements (failure-free runs are node-for-node
   identical).  The same scheduler instance is shared with the executors
   (per-pool dispatch) and the retry planner (rung candidate selection), so
-  load- and history-awareness apply uniformly — which also means retry and
-  speculation placements consume ticks from the same per-pool rotation
-  instead of the old first-feasible-candidate rule;
+  load- and history-awareness apply uniformly;
 * an **event loop** (:mod:`repro.engine.events`) through which every
   dispatch, delayed retry, heartbeat check and straggler check flows as a
   time-ordered event — no per-retry ``threading.Timer``, no polling
   watcher thread.
+
+The proactive refactor adds a third: an optional **proactive sentinel**
+(:mod:`repro.core.proactive`, enabled with ``proactive=True``) that closes
+the paper's monitoring↔resilience feedback loop.  It reviews dispatches
+and retry decisions inline (predictive fast-fail) and runs a periodic
+health sweep (node drain / preemptive migration) — backed by a real task
+**cancellation path**: :meth:`cancel_task` pulls still-queued records off
+node queues, :meth:`preempt_task` migrates queued or running tasks away
+from a node, and :meth:`drain_node` evacuates a node before hard loss.
 
 The framework-side watchers are periodic events:
 
 * a **heartbeat watcher** that declares nodes lost when their system
   monitoring agent goes silent (paper §IV), failing in-flight tasks with
   :class:`HardwareShutdownError` so they flow through the retry handler;
-* a **straggler watcher** that (optionally) speculatively re-executes tasks
-  running far beyond their expected duration on a different node — the
-  training-plane straggler mitigation, available to the task plane too.
+* a **straggler watcher** that (optionally) speculatively re-executes
+  tasks running far beyond their expected duration on a different node.
+  The expected duration is *profile-derived* — the p95 of the template's
+  observed durations from the monitoring database — with the static
+  user-supplied ``est_duration_s`` as fallback while history accumulates.
 
 Batched submission with backpressure is available via :meth:`map`: the
 number of outstanding (submitted, unfinished) tasks is capped so a large
@@ -39,15 +48,16 @@ from __future__ import annotations
 
 import threading
 import time
-from typing import Any, Iterable
+from typing import TYPE_CHECKING, Any, Iterable
 
 from repro.core.failures import (
     DependencyError,
     FailureReport,
     HardwareShutdownError,
     ResourceStarvationError,
+    TaskCancelledError,
 )
-from repro.engine.cluster import Cluster, Node
+from repro.engine.cluster import Cluster
 from repro.engine.events import EventLoop
 from repro.engine.executor import Executor
 from repro.engine.retry_api import (
@@ -58,6 +68,9 @@ from repro.engine.retry_api import (
 )
 from repro.engine.scheduler import RoundRobinScheduler, Scheduler
 from repro.engine.task import AppFuture, TaskDef, TaskRecord, TaskState, new_task_record
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard
+    from repro.core.proactive import ProactiveConfig, ProactiveSentinel
 
 
 def _iter_futures(obj: Any):
@@ -94,6 +107,7 @@ class DataFlowKernel:
         retry_handler=None,
         monitor=None,
         scheduler: Scheduler | None = None,
+        proactive: "bool | ProactiveConfig | ProactiveSentinel" = False,
         default_retries: int = 2,
         default_pool: str | None = None,
         heartbeat_period: float = 0.05,
@@ -106,6 +120,10 @@ class DataFlowKernel:
         self.monitor = monitor
         self.retry_handler = retry_handler or baseline_retry_handler
         self.scheduler = scheduler or RoundRobinScheduler()
+        # lazy import: repro.core.proactive imports repro.engine.retry_api,
+        # which initializes this package — a module-level import would cycle
+        from repro.core.proactive import make_sentinel
+        self.sentinel = make_sentinel(proactive)
         self.default_retries = default_retries
         self.default_pool = default_pool or next(iter(cluster.pools))
         self.heartbeat_period = heartbeat_period
@@ -117,21 +135,27 @@ class DataFlowKernel:
         self.tasks: dict[str, TaskRecord] = {}
         self.executors: dict[str, Executor] = {}
         self.denylist: set[str] = set()
+        self.drained: set[str] = set()   # sentinel-drained subset of denylist
         self._assignment: dict[str, tuple[str, str]] = {}  # task -> (pool, node)
         self._children: dict[str, list[TaskRecord]] = {}
         self._speculated: set[str] = set()
+        # task -> (backup copy record, node it was queued on); the loser of
+        # the race is cancelled when the winner finishes
+        self._spec_copies: dict[str, tuple[TaskRecord, str | None]] = {}
         self._done_first: dict[str, bool] = {}
         self._resume_logged: set[str] = set()  # nodes whose resume was recorded
 
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         self._outstanding = 0
-        self.events = EventLoop(name="dfk-events")
+        self.events = EventLoop(name="dfk-events", on_error=self._on_event_error)
 
         self.stats: dict[str, float] = {
             "submitted": 0, "completed": 0, "failed": 0, "dep_failed": 0,
             "retries": 0, "retry_success": 0, "wrath_overhead_s": 0.0,
             "restarts": 0, "speculations": 0, "start_time": 0.0,
+            # proactive plane
+            "fast_fails": 0, "preemptions": 0, "drains": 0, "cancelled": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -168,8 +192,12 @@ class DataFlowKernel:
             self.events.schedule_periodic(
                 self.heartbeat_period, self._check_stragglers,
                 name="straggler-check")
+        if self.sentinel is not None:
+            self.sentinel.attach(self)
 
     def shutdown(self) -> None:
+        if self.sentinel is not None:
+            self.sentinel.detach()
         self.events.stop()
         for ex in self.executors.values():
             ex.stop()
@@ -178,7 +206,14 @@ class DataFlowKernel:
         return SchedulingContext(
             cluster=self.cluster, monitor=self.monitor,
             denylist=self.denylist, default_pool=self.default_pool,
-            scheduler=self.scheduler)
+            scheduler=self.scheduler, drained=self.drained)
+
+    def _on_event_error(self, event_name: str, err: BaseException) -> None:
+        """Swallowed watcher/callback exceptions stay visible as events."""
+        if self.monitor is not None:
+            self.monitor.record_system_event(
+                "event_error", event=event_name, error=type(err).__name__,
+                message=str(err))
 
     # ------------------------------------------------------------------ #
     # submission & dependency resolution
@@ -272,6 +307,17 @@ class DataFlowKernel:
         self._dispatch(rec)
 
     def _dispatch(self, rec: TaskRecord) -> None:
+        if self._done_first.get(rec.task_id) or rec.cancel_requested:
+            return  # cancelled/resolved while queued for dispatch
+        if rec.first_dispatch_time <= 0:
+            rec.first_dispatch_time = time.time()
+        if self.sentinel is not None:
+            t0 = time.perf_counter()
+            reason = self.sentinel.check_dispatch(rec)
+            self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+            if reason is not None:
+                self.fast_fail_task(rec.task_id, reason)
+                return
         pool_name = rec.target_pool or self.default_pool
         ex = self.executors.get(pool_name)
         if ex is None:
@@ -292,6 +338,177 @@ class DataFlowKernel:
             self.monitor.record_task_event(
                 rec.task_id, "scheduled", pool=pool_name, node=node.name,
                 attempt=rec.retry_count)
+
+    # ------------------------------------------------------------------ #
+    # cancellation / preemption / drain (the proactive action surface)
+    # ------------------------------------------------------------------ #
+    def fast_fail_task(self, task_id: str, reason: str) -> bool:
+        """Predictive fast-fail: terminally fail a destined-to-fail task."""
+        err = ResourceStarvationError(reason)
+        if self.cancel_task(task_id, reason=reason, exc=err):
+            self.stats["fast_fails"] += 1
+            return True
+        return False
+
+    def cancel_task(self, task_id: str, *, reason: str = "",
+                    exc: BaseException | None = None) -> bool:
+        """Terminally cancel a task, pulling it off a node queue if queued.
+
+        The future is resolved with ``exc`` (default
+        :class:`TaskCancelledError`); a record already picked up by a
+        worker keeps running to completion but its result is dropped (the
+        worker's ``finally`` still releases node memory).  Returns False
+        when the task is unknown or already resolved.
+        """
+        rec = self.tasks.get(task_id)
+        if rec is None:
+            return False
+        with self._lock:
+            if self._done_first.get(task_id) or rec.state in (
+                    TaskState.COMPLETED, TaskState.FAILED, TaskState.DEP_FAILED):
+                return False
+            rec.cancel_requested = True
+            rec.cancel_reason = reason
+            pool_name, node_name = self._assignment.get(task_id, (None, None))
+        if node_name:
+            ex = self.executors.get(pool_name or self.default_pool)
+            if ex is not None:
+                ex.cancel_queued(task_id, node_name)  # real dequeue if still queued
+        err = exc or TaskCancelledError(reason or f"task {task_id} cancelled",
+                                        task_id=task_id)
+        with self._lock:
+            if self._done_first.get(task_id):
+                return False  # completed in the window between the two locks
+            self._done_first[task_id] = True
+            rec.state = TaskState.FAILED
+            rec.exception = err
+            rec.terminal_time = time.time()
+            self.stats["cancelled"] += 1
+            self.stats["failed"] += 1
+        if self.monitor is not None:
+            self.monitor.record_task_event(task_id, "cancelled", reason=reason)
+        self._cancel_race_loser(rec, task_id)
+        self._finish(rec, error=err)
+        return True
+
+    def preempt_task(self, task_id: str, *, reason: str = "") -> bool:
+        """Migrate a task away from its current node (proactive PREEMPT).
+
+        A still-queued record is *really* cancelled (pulled off the node
+        queue) and re-dispatched elsewhere; a running record gets a backup
+        copy on another node — first finisher wins, exactly the
+        speculative-execution race — because a thread-based worker cannot
+        be interrupted mid-``fn``.
+        """
+        rec = self.tasks.get(task_id)
+        if rec is None or self._done_first.get(task_id):
+            return False
+        with self._lock:
+            pool_name, node_name = self._assignment.get(task_id, (None, None))
+        if node_name is None:
+            return False
+        ex = self.executors.get(pool_name or self.default_pool)
+        if ex is None:
+            return False
+        if ex.cancel_queued(task_id, node_name):
+            # real cancellation: steer the re-dispatch away from the node
+            candidates = [n for n in ex.eligible_nodes(rec)
+                          if n.name != node_name]
+            target = self.scheduler.select(rec, candidates, pool=ex.pool)
+            rec.target_node = target.name if target is not None else None
+            self.events.call_soon(self._dispatch, rec, name="preempt-dispatch")
+        elif task_id not in self._speculated:
+            # already running: migrate via a backup copy (winner-takes-future)
+            self._speculated.add(task_id)
+            if self._launch_copy(rec, avoid_node=node_name) is None:
+                return False
+        else:
+            return False  # a backup already races this task; nothing to do
+        self.stats["preemptions"] += 1
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                task_id, "preempted", node=node_name, reason=reason)
+        return True
+
+    def drain_node(self, node_name: str, *, reason: str = "",
+                   preempt: bool = True) -> bool:
+        """Drain a node before hard loss: stop placing, migrate in-flight.
+
+        The node joins the denylist *and* the drained set: the policy
+        engine's heartbeat-resume rule leaves drained nodes alone — only
+        :meth:`undrain_node` (the sentinel, once trends recover) releases
+        them.
+        """
+        if node_name in self.drained:
+            return False
+        self.drained.add(node_name)
+        self.denylist.add(node_name)
+        self.stats["drains"] += 1
+        if self.monitor is not None:
+            self.monitor.record_system_event("node_drain", node=node_name,
+                                             reason=reason)
+        if preempt:
+            victims = [tid for tid, rec in list(self.tasks.items())
+                       if self._assignment.get(tid, (None, None))[1] == node_name
+                       and rec.state in (TaskState.SCHEDULED, TaskState.RUNNING)
+                       and not self._done_first.get(tid)]
+            for tid in victims:
+                self.preempt_task(tid, reason=f"node {node_name} draining")
+        return True
+
+    def undrain_node(self, node_name: str) -> None:
+        self.drained.discard(node_name)
+        self.denylist.discard(node_name)
+        if self.monitor is not None:
+            self.monitor.record_system_event("node_undrain", node=node_name)
+
+    def _launch_copy(self, rec: TaskRecord, *,
+                     avoid_node: str | None) -> TaskRecord | None:
+        """Start a backup copy of ``rec`` on a different node.
+
+        Shared by straggler speculation and preemptive migration: the copy
+        shares the original's future and task id; whichever attempt
+        finishes first wins (``_done_first``), and the loser is cancelled.
+        """
+        pool_name, _ = self._assignment.get(rec.task_id,
+                                            (self.default_pool, None))
+        ex = self.executors.get(pool_name or self.default_pool)
+        if ex is None:
+            return None
+        copy = TaskRecord(
+            task_id=rec.task_id, fn=rec.fn, name=rec.name, args=rec.args,
+            kwargs=rec.kwargs, resources=rec.resources,
+            max_retries=0, future=rec.future)
+        copy.is_speculative = True
+        candidates = [c for c in ex.eligible_nodes(copy)
+                      if c.name != avoid_node]
+        target = self.scheduler.select(copy, candidates, pool=ex.pool)
+        if target is not None:
+            copy.target_node = target.name
+        placed = ex.submit(copy)
+        with self._lock:
+            self._spec_copies[rec.task_id] = (
+                copy, placed.name if placed is not None else None)
+        return copy
+
+    def _cancel_race_loser(self, winner: TaskRecord, task_id: str) -> None:
+        """When one attempt resolves the task, cancel the other attempt."""
+        with self._lock:
+            pair = self._spec_copies.pop(task_id, None)
+            if pair is None:
+                return
+            copy, copy_node = pair
+            pool_name, orig_node = self._assignment.get(task_id, (None, None))
+            original = self.tasks.get(task_id)
+        loser, loser_node = ((copy, copy_node) if winner is not copy
+                             else (original, orig_node))
+        if loser is None or loser is winner:
+            return
+        loser.cancel_requested = True
+        loser.cancel_reason = "lost the speculative race"
+        ex = self.executors.get(pool_name or self.default_pool)
+        if ex is not None and loser_node:
+            ex.cancel_queued(task_id, loser_node)  # never runs if still queued
 
     # ------------------------------------------------------------------ #
     # results & failure routing
@@ -319,10 +536,11 @@ class DataFlowKernel:
                 error=type(err).__name__ if err else None)
             if node:
                 self.monitor.record_task_placement(
-                    rec.name, node, pool, ok=err is None, duration=duration)
+                    rec.name, node, pool, ok=err is None, duration=duration,
+                    memory_gb=rec.effective_resources().memory_gb)
         with self._lock:
             if self._done_first.get(rec.task_id):
-                return  # a speculative copy already finished this task
+                return  # another attempt (or a cancellation) resolved this task
             if err is None:
                 self._done_first[rec.task_id] = True
                 rec.state = TaskState.COMPLETED
@@ -330,9 +548,10 @@ class DataFlowKernel:
                     self.stats["retry_success"] += 1
                 self.stats["completed"] += 1
         if err is None:
+            self._cancel_race_loser(rec, rec.task_id)
             self._finish(rec, result=result)
         else:
-            if getattr(rec, "is_speculative", False):
+            if rec.is_speculative:
                 return  # backup copy failed; the original is still in flight
             report = self._make_report(rec, err, node=node, pool=pool,
                                        worker=getattr(worker, "worker_id", None))
@@ -368,6 +587,12 @@ class DataFlowKernel:
         except Exception as handler_err:  # noqa: BLE001 - handler bug = fail task
             decision = RetryDecision(Action.FAIL,
                                      reason=f"retry handler error: {handler_err!r}")
+        # proactive second opinion: veto retries destined to fail
+        if self.sentinel is not None and decision.action is not Action.FAIL:
+            try:
+                decision = self.sentinel.review_retry(rec, report, decision)
+            except Exception as sentinel_err:  # noqa: BLE001 - sentinel bug = keep decision
+                self._on_event_error("proactive-review", sentinel_err)
         self.stats["wrath_overhead_s"] += time.perf_counter() - t0
 
         # engine invariant: a child whose parent terminally failed can never
@@ -384,6 +609,10 @@ class DataFlowKernel:
                 reason=decision.reason, rung=decision.rung,
                 target_pool=decision.target_pool, target_node=decision.target_node)
 
+        if decision.action is Action.DRAIN and report.node:
+            # drain the failing node, then retry the task elsewhere
+            self.drain_node(report.node, reason=decision.reason)
+
         if decision.action is Action.RESTART_AND_RETRY and decision.restart_component:
             kind, _, where = decision.restart_component.partition(":")
             if kind == "worker" and where:
@@ -392,13 +621,27 @@ class DataFlowKernel:
                 if ex is not None:
                     self.stats["restarts"] += ex.restart_workers(where)
 
-        if decision.action in (Action.RETRY, Action.RESTART_AND_RETRY):
+        if decision.action in (Action.RETRY, Action.RESTART_AND_RETRY,
+                               Action.PREEMPT, Action.DRAIN):
+            target_node = decision.target_node
+            if (decision.action is Action.PREEMPT and target_node is None
+                    and report.node):
+                # PREEMPT's contract is "migrate off the current node": with
+                # no explicit pin, steer the re-dispatch away from it
+                ex = self.executors.get(decision.target_pool
+                                        or report.pool or self.default_pool)
+                if ex is not None:
+                    candidates = [n for n in ex.eligible_nodes(rec)
+                                  if n.name != report.node]
+                    picked = self.scheduler.select(rec, candidates, pool=ex.pool)
+                    if picked is not None:
+                        target_node = picked.name
             with self._lock:
                 rec.retry_count += 1
                 self.stats["retries"] += 1
                 rec.state = TaskState.RETRYING
                 rec.target_pool = decision.target_pool
-                rec.target_node = decision.target_node
+                rec.target_node = target_node
                 if decision.resource_overrides:
                     rec.resource_overrides.update(decision.resource_overrides)
             # delayed retries are ordinary events on the engine loop — no
@@ -416,6 +659,7 @@ class DataFlowKernel:
             self._done_first[rec.task_id] = True
             rec.state = TaskState.DEP_FAILED if is_dep else TaskState.FAILED
             rec.exception = err
+            rec.terminal_time = time.time()
             self.stats["dep_failed" if is_dep else "failed"] += 1
         self._finish(rec, error=err)
 
@@ -483,34 +727,37 @@ class DataFlowKernel:
                                        pool=self._assignment[rec.task_id][0])
             self._route_failure(rec, report, err)
 
+    def _straggler_estimate(self, rec: TaskRecord) -> float:
+        """Expected duration for straggler detection.
+
+        Profile-derived (template p95 from the monitoring database) when
+        enough history exists; the static user-declared ``est_duration_s``
+        is the cold-start fallback.  0.0 = no estimate, no detection.
+        """
+        if self.monitor is not None:
+            est = self.monitor.expected_duration(rec.name)
+            if est > 0:
+                return est
+        return rec.resources.est_duration_s
+
     def _check_stragglers(self) -> None:
         now = time.time()
         for tid, rec in list(self.tasks.items()):
             if self._done_first.get(tid) or tid in self._speculated:
                 continue
-            est = rec.resources.est_duration_s
-            if est <= 0 or rec.start_time <= 0:
+            # only tasks a worker actually picked up accrue runtime — the
+            # RUNNING transition is set by the worker on pickup
+            if rec.state is not TaskState.RUNNING or rec.start_time <= 0:
                 continue
-            if rec.state is TaskState.SCHEDULED and now - rec.start_time > self.straggler_factor * est:
+            est = self._straggler_estimate(rec)
+            if est <= 0:
+                continue
+            if now - rec.start_time > self.straggler_factor * est:
                 self._speculated.add(tid)
                 self.stats["speculations"] += 1
-                pool, node = self._assignment.get(tid, (self.default_pool, None))
-                copy = TaskRecord(
-                    task_id=tid, fn=rec.fn, name=rec.name, args=rec.args,
-                    kwargs=rec.kwargs, resources=rec.resources,
-                    max_retries=0, future=rec.future)
-                copy.is_speculative = True  # type: ignore[attr-defined]
-                ex = self.executors.get(pool or self.default_pool)
-                if ex is None:
-                    continue
-                # place the backup copy away from the straggler node
-                candidates = [c for c in ex.eligible_nodes(copy)
-                              if c.name != node]
-                target = self.scheduler.select(copy, candidates, pool=ex.pool)
-                if target is not None:
-                    copy.target_node = target.name
-                ex.submit(copy)
-                if self.monitor is not None:
+                _, node = self._assignment.get(tid, (self.default_pool, None))
+                copy = self._launch_copy(rec, avoid_node=node)
+                if copy is not None and self.monitor is not None:
                     self.monitor.record_task_event(
                         tid, "speculative_copy", original_node=node)
 
@@ -535,3 +782,20 @@ class DataFlowKernel:
             "tasks": total,
             "retries": retried,
         }
+
+    def failed_task_ttfs(self, *, include_dep_failed: bool = False) -> list[float]:
+        """Per-task time-to-failure (first dispatch -> terminal) of failed
+        tasks; dependency-wait before the first placement is excluded.
+
+        The proactive plane's headline metric: destined-to-fail tasks
+        should terminate sooner (fig 4's normalized TTF < 1).  Dep-failed
+        children are excluded by default: their terminal time is gated by
+        when their *healthy* sibling parents finish, which says nothing
+        about how fast the doomed parent itself was terminated.
+        """
+        states = ((TaskState.FAILED, TaskState.DEP_FAILED)
+                  if include_dep_failed else (TaskState.FAILED,))
+        return [rec.terminal_time - (rec.first_dispatch_time or rec.submit_time)
+                for rec in self.tasks.values()
+                if rec.terminal_time > 0 and rec.submit_time > 0
+                and rec.state in states]

@@ -57,7 +57,8 @@ class EventLoop:
     timestamp order, FIFO among equal timestamps.
     """
 
-    def __init__(self, name: str = "engine-events"):
+    def __init__(self, name: str = "engine-events",
+                 on_error: Callable[[str, BaseException], Any] | None = None):
         self._heap: list[tuple[float, int, ScheduledEvent]] = []
         self._cond = threading.Condition()
         self._seq = itertools.count()
@@ -65,6 +66,9 @@ class EventLoop:
         self._thread = threading.Thread(target=self._run, daemon=True, name=name)
         # observability: how many events have executed, by name
         self.dispatched: dict[str, int] = {}
+        # optional hook observing swallowed callback exceptions (the DFK
+        # records them as system events so watcher bugs stay visible)
+        self.on_error = on_error
 
     # -- lifecycle --------------------------------------------------------
     def start(self) -> "EventLoop":
@@ -140,8 +144,12 @@ class EventLoop:
                 continue
             try:
                 ev.fn(*ev.args)
-            except Exception:  # noqa: BLE001 - an event must not kill the loop
-                pass
+            except Exception as e:  # noqa: BLE001 - an event must not kill the loop
+                if self.on_error is not None:
+                    try:
+                        self.on_error(ev.name, e)
+                    except Exception:  # noqa: BLE001 - hook bugs stay contained
+                        pass
             self.dispatched[ev.name] = self.dispatched.get(ev.name, 0) + 1
             if ev.period is not None and not ev.cancelled:
                 with self._cond:

@@ -88,8 +88,27 @@ class Executor:
         node = self.select_node(record)
         if node is None:
             return None
+        if not any(w.alive for w in node.workers):
+            # every worker on the target died (e.g. killed mid-task) and the
+            # manager's periodic respawn hasn't fired yet: respawn now so
+            # the submission doesn't stall for up to a heartbeat period
+            mgr = self.managers.get(node.name)
+            if mgr is not None:
+                mgr.restart_dead_workers()
         node.task_queue.put(record)
         return node
+
+    def cancel_queued(self, task_id: str, node_name: str) -> bool:
+        """Real cancellation: pull a still-queued task off its node.
+
+        Returns True if the record was removed before any worker picked it
+        up; False means the task is already running (or finished) and the
+        caller must use the migration/ignore path instead.
+        """
+        mgr = self.managers.get(node_name)
+        if mgr is None:
+            return False
+        return mgr.cancel(task_id) is not None
 
     # -- component restart (WRATH policy action) --------------------------
     def restart_workers(self, node_name: str) -> int:

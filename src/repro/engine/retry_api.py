@@ -18,6 +18,10 @@ class Action(enum.Enum):
     RETRY = "retry"                      # re-execute (possibly elsewhere)
     FAIL = "fail"                        # terminal: fail-fast, no more retries
     RESTART_AND_RETRY = "restart_retry"  # restart failed component, then retry
+    # proactive-plane actions (paper §IV↔§V feedback loop): emitted by the
+    # ProactiveSentinel and honoured by the DFK; handlers may return them too
+    PREEMPT = "preempt"                  # migrate off the current node now
+    DRAIN = "drain"                      # drain the node, then retry elsewhere
 
 
 @dataclass
@@ -57,6 +61,10 @@ class SchedulingContext:
     denylist: set[str] = field(default_factory=set)   # node names
     default_pool: str | None = None
     scheduler: Any = None             # repro.engine.scheduler.Scheduler | None
+    # nodes denylisted by the proactive sentinel's drain (subset of
+    # denylist); the policy engine's heartbeat-resume rule must not
+    # un-denylist these — the sentinel owns their lifecycle (undrain)
+    drained: set[str] = field(default_factory=set)
 
 
 def baseline_retry_handler(record, report: FailureReport, ctx: SchedulingContext) -> RetryDecision:

@@ -97,9 +97,23 @@ class TaskRecord:
     # resource overrides suggested by the resilience module (rung 1)
     resource_overrides: dict[str, Any] = field(default_factory=dict)
     submit_time: float = 0.0
+    # first time the DFK tried to place this task (dependencies resolved);
+    # per-task TTF measures from here so dependency wait isn't billed
+    first_dispatch_time: float = 0.0
     start_time: float = 0.0
     end_time: float = 0.0
+    # terminal-failure wall-clock timestamp (0 = not terminally failed);
+    # the per-task time-to-failure metric is terminal_time minus
+    # first_dispatch_time (falling back to submit_time if never dispatched)
+    terminal_time: float = 0.0
     exception: BaseException | None = None
+    # cancellation (proactive plane): a worker that dequeues a record with
+    # cancel_requested set drops it without executing
+    cancel_requested: bool = False
+    cancel_reason: str = ""
+    # backup copy launched by straggler speculation / preemptive migration;
+    # its result is only used if it finishes before the original
+    is_speculative: bool = False
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def effective_resources(self) -> ResourceSpec:

@@ -26,9 +26,8 @@ import traceback
 from pathlib import Path
 
 import jax
-import numpy as np
 
-from repro.configs import ALIASES, ARCH_IDS, get_config
+from repro.configs import ARCH_IDS, get_config
 from repro.distributed import (
     ACT_RULES,
     CACHE_RULES,
@@ -46,7 +45,6 @@ from repro.launch.shapes import (
     SHAPES,
     batch_axes,
     batch_specs,
-    cache_specs,
     shape_applicable,
 )
 from repro.models import cache_defs, param_defs

@@ -20,7 +20,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, RGLRUCfg
 from repro.models.layers import constrain
-from repro.models.spec import ParamDef, pdef
+from repro.models.spec import pdef
 
 _C = 8.0
 

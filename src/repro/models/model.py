@@ -16,7 +16,6 @@ Public API (all pure functions, bound to a ModelConfig):
 """
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

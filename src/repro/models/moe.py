@@ -21,7 +21,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, MoECfg
 from repro.models.layers import constrain
-from repro.models.spec import ParamDef, pdef
+from repro.models.spec import pdef
 
 
 def make_moe_defs(cfg: ModelConfig) -> dict:

@@ -14,7 +14,7 @@ import jax.numpy as jnp
 
 from repro.models.config import ModelConfig, SSMCfg
 from repro.models.layers import constrain, rms_norm
-from repro.models.spec import ParamDef, pdef
+from repro.models.spec import pdef
 
 
 def ssm_dims(cfg: ModelConfig) -> dict[str, int]:

@@ -19,12 +19,11 @@ import dataclasses
 import re
 from typing import Any
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.mesh import HBM_BW, ICI_BW_PER_LINK, PEAK_FLOPS_BF16
 from repro.models.config import ModelConfig
-from repro.models.spec import ParamDef, is_def
+from repro.models.spec import is_def
 
 _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                 "collective-permute")

@@ -22,8 +22,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -55,6 +53,9 @@ class ServeReport:
     recoveries: list[dict]
     denylisted: list[str]
     wall_s: float
+    # per-replica health snapshot from the monitoring database's streaming
+    # profiles (success rate + decode-duration mean/p95)
+    replica_health: dict[str, dict] = dataclasses.field(default_factory=dict)
 
     @property
     def tokens_per_s(self) -> float:
@@ -64,9 +65,11 @@ class ServeReport:
 class WrathServeDriver:
     def __init__(self, cfg: ModelConfig, *, n_replicas: int = 3,
                  max_batch: int = 4, seed: int = 0,
-                 scheduler: Scheduler | None = None):
+                 scheduler: Scheduler | None = None,
+                 health_gate: bool = True):
         self.cfg = cfg
         self.max_batch = max_batch
+        self.health_gate = health_gate
         nodes = [Node(f"replica{i}", workers_per_node=1)
                  for i in range(n_replicas)]
         self.cluster = Cluster([ResourcePool("serve", nodes)])
@@ -88,11 +91,43 @@ class WrathServeDriver:
                 if n.healthy and n.name not in self.denylist]
 
     def _pick_replica(self, rec, exclude: str | None = None) -> Node | None:
-        """Scheduler-driven replica selection over the healthy serve pool."""
+        """Scheduler-driven replica selection over the healthy serve pool.
+
+        With ``health_gate`` the monitoring database's placement profile is
+        consulted first: a replica that has only ever failed batches
+        (>= 2 failures, 0 successes) is skipped while healthier candidates
+        exist — the serving analog of the proactive plane's "stop placing
+        on a node trending toward failure".
+        """
         pool = self.cluster.pools["serve"]
         candidates = [n for n in self.replicas() if n.name != exclude]
+        if self.health_gate and candidates:
+            hist = self.monitor.node_history("decode_batch")
+
+            def suspect(n: Node) -> bool:
+                s = hist.get(n.name)
+                return s is not None and s.failures >= 2 and s.successes == 0
+
+            vetted = [n for n in candidates if not suspect(n)]
+            candidates = vetted or candidates
         return self.scheduler.select(rec, candidates or self.replicas(),
                                      pool=pool)
+
+    def replica_health(self) -> dict[str, dict]:
+        """Streaming-profile health snapshot of every replica."""
+        hist = self.monitor.node_history("decode_batch")
+        out: dict[str, dict] = {}
+        for n in self.cluster.pools["serve"].nodes:
+            stats = hist.get(n.name)
+            dur = self.monitor.duration_stats("decode_batch", node=n.name)
+            out[n.name] = {
+                "live": n.healthy and n.name not in self.denylist,
+                "batches": stats.total if stats else 0,
+                "success_rate": stats.success_rate if stats else None,
+                "decode_s_mean": dur.mean if dur else None,
+                "decode_s_p95": dur.p95 if dur else None,
+            }
+        return out
 
     # ------------------------------------------------------------------ #
     def _decode_on(self, replica: Node, state: dict, batch: dict):
@@ -194,4 +229,5 @@ class WrathServeDriver:
         return ServeReport(completed=completed, failed=failed,
                            tokens_generated=tokens, recoveries=recoveries,
                            denylisted=sorted(self.denylist),
-                           wall_s=time.time() - t0)
+                           wall_s=time.time() - t0,
+                           replica_health=self.replica_health())

@@ -27,8 +27,6 @@ from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Any, Callable
-
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -93,6 +91,7 @@ class WrathTrainSupervisor:
         data_seed: int = 0,
         straggler_factor: float = 3.0,
         scheduler: Scheduler | None = None,
+        profile_shard_sizing: bool = True,
     ):
         self.cfg = cfg
         self.opt_cfg = opt_cfg
@@ -101,6 +100,7 @@ class WrathTrainSupervisor:
         self.data_seed = data_seed
         self.shard_memory_gb = shard_memory_gb
         self.straggler_factor = straggler_factor
+        self.profile_shard_sizing = profile_shard_sizing
 
         nodes = [Node(f"host{i:02d}", memory_gb=host_memory_gb,
                       workers_per_node=1) for i in range(n_hosts)]
@@ -160,6 +160,46 @@ class WrathTrainSupervisor:
             ordered.append(pick)
             remaining.remove(pick)
         return ordered
+
+    def _shard_sizes(self, hosts: list[Node]) -> list[int]:
+        """Per-host shard sizes for one step.
+
+        With ``profile_shard_sizing`` the monitoring database's streaming
+        duration profiles size each host's sub-batch proportionally to its
+        observed throughput (1 / mean shard duration): fast hosts get more
+        samples, chronic stragglers get fewer — but every host keeps at
+        least one sample so its profile stays fresh and the chronic-
+        straggler machinery still observes it.  Hosts without enough
+        history (< 3 shards) get the mean observed rate.  Falls back to the
+        uniform ``np.array_split`` sizes while no history exists.
+        """
+        n = len(hosts)
+        uniform = [len(a) for a in
+                   np.array_split(np.arange(self.global_batch), n)]
+        if (not self.profile_shard_sizing or n <= 1
+                or self.global_batch < n):
+            return uniform
+        rates: list[float | None] = []
+        for h in hosts:
+            stats = self.monitor.duration_stats("grad_shard", node=h.name)
+            rates.append(1.0 / max(stats.mean, 1e-6)
+                         if stats is not None and stats.n >= 3 else None)
+        known = [r for r in rates if r is not None]
+        if not known:
+            return uniform
+        fill = sum(known) / len(known)
+        weights = [r if r is not None else fill for r in rates]
+        # floor of 1 sample per host, remainder by largest-remainder quota
+        spare = self.global_batch - n
+        total = sum(weights)
+        quotas = [spare * w / total for w in weights]
+        sizes = [1 + int(q) for q in quotas]
+        leftover = self.global_batch - sum(sizes)
+        order = sorted(range(n), key=lambda i: quotas[i] - int(quotas[i]),
+                       reverse=True)
+        for i in order[:leftover]:
+            sizes[i] += 1
+        return sizes
 
     # ------------------------------------------------------------------ #
     def _shard_task(self, step: int, host: Node, params, batch,
@@ -234,7 +274,10 @@ class WrathTrainSupervisor:
                 self.healthy_hosts() or [self.cluster.find_node("bighost")])
             batch = batch_for(self.cfg, self.global_batch, self.seq_len,
                               step + data_jitter, seed=self.data_seed)
-            shards = np.array_split(np.arange(self.global_batch), len(hosts))
+            sizes = self._shard_sizes(hosts)
+            edges = np.cumsum([0] + sizes)
+            shards = [np.arange(edges[i], edges[i + 1])
+                      for i in range(len(hosts))]
 
             grads_acc = None
             loss_acc = 0.0
@@ -258,12 +301,15 @@ class WrathTrainSupervisor:
                         dt = time.perf_counter() - t0
                         self.monitor.record_task_placement(
                             "grad_shard", attempt_host.name, "pod0", ok=True,
-                            duration=dt)
-                        # straggler detection: EMA of shard times
-                        ema = self._host_times.get(attempt_host.name, dt)
-                        self._host_times[attempt_host.name] = 0.7 * ema + 0.3 * dt
+                            duration=dt, memory_gb=self.shard_memory_gb)
+                        # straggler detection: EMA of *per-sample* shard
+                        # times — profile-weighted sizing hands fast hosts
+                        # bigger shards, so raw durations no longer compare
+                        per = dt / max(len(idx), 1)
+                        ema = self._host_times.get(attempt_host.name, per)
+                        self._host_times[attempt_host.name] = 0.7 * ema + 0.3 * per
                         median = float(np.median(list(self._host_times.values())))
-                        if dt > self.straggler_factor * max(median, 1e-4) \
+                        if per > self.straggler_factor * max(median, 1e-4) \
                                 and len(hosts) > 1:
                             # rung-3 style: speculatively redo on the
                             # historically fastest host (or wherever the

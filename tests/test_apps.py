@@ -40,7 +40,6 @@ def test_cholesky_dag_result_matches_numpy():
 
 
 def test_fedlearn_learns():
-    from repro.apps.fedlearn import SCALES
     r = None
     from repro.engine import DataFlowKernel
     with DataFlowKernel(Cluster.homogeneous(2)) as dfk:

@@ -1,5 +1,4 @@
 """Checkpoint store: atomic commit, bf16 round-trip, retention, resume."""
-import threading
 
 import jax
 import jax.numpy as jnp
@@ -61,6 +60,48 @@ def test_async_save_completes(tmp_path, tree):
     mgr.save(1, tree)
     mgr.wait()
     assert mgr.steps() == [1]
+
+
+def test_async_save_error_surfaces_on_wait(tmp_path, tree, monkeypatch):
+    """A failed async write must not die silently in the daemon thread."""
+    import repro.checkpoint.store as store
+
+    def boom(*a, **k):
+        raise OSError("disk full")
+
+    monkeypatch.setattr(store, "save_checkpoint", boom)
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    mgr.save(1, tree)
+    with pytest.raises(OSError, match="disk full"):
+        mgr.wait()
+    # the error is consumed once surfaced; the manager stays usable
+    mgr.wait()
+    monkeypatch.undo()
+    mgr.save(2, tree)
+    mgr.wait()
+    assert mgr.steps() == [2]
+
+
+def test_async_save_error_surfaces_on_next_save(tmp_path, tree, monkeypatch):
+    import repro.checkpoint.store as store
+
+    real = store.save_checkpoint
+    calls = {"n": 0}
+
+    def flaky(*a, **k):
+        calls["n"] += 1
+        if calls["n"] == 1:
+            raise RuntimeError("transient write failure")
+        return real(*a, **k)
+
+    monkeypatch.setattr(store, "save_checkpoint", flaky)
+    mgr = CheckpointManager(tmp_path, keep=2, async_save=True)
+    mgr.save(1, tree)
+    with pytest.raises(RuntimeError, match="transient write failure"):
+        mgr.save(2, tree)   # next save surfaces the earlier failure
+    mgr.save(3, tree)
+    mgr.wait()
+    assert mgr.steps() == [3]
 
 
 def test_overwrite_same_step(tmp_path, tree):

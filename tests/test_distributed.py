@@ -9,7 +9,6 @@ from hypothesis import given, settings, strategies as st
 from jax.sharding import PartitionSpec as P
 
 from repro.distributed.sharding import (
-    ACT_RULES,
     CACHE_RULES,
     PARAM_RULES,
     defs_pspecs,

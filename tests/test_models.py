@@ -13,16 +13,14 @@ from hypothesis import given, settings, strategies as st
 from repro.configs import ARCH_IDS, get_config, get_smoke_config
 from repro.models import (
     ModelConfig,
-    MoECfg,
     cache_defs,
     decode_step,
     forward_train,
-    loss_fn,
     param_defs,
     param_count,
 )
 from repro.models.model import _logits
-from repro.models.spec import abstract, materialize
+from repro.models.spec import materialize
 
 KEY = jax.random.PRNGKey(42)
 

@@ -1,0 +1,163 @@
+"""Streaming monitoring: online profiles, ring retention, radio parity."""
+import math
+import time
+
+import pytest
+
+from repro.core import MonitoringDatabase, StreamingStats
+from repro.core.failures import FailureReport
+from repro.core.monitoring import TCPRadio, TCPRadioServer, serialize_report
+
+
+# ------------------------------------------------------ streaming stats --
+def test_streaming_stats_matches_reference():
+    import random
+    rng = random.Random(7)
+    xs = [rng.gauss(5.0, 2.0) for _ in range(500)]
+    s = StreamingStats(sample_cap=500)
+    for x in xs:
+        s.push(x)
+    mean = sum(xs) / len(xs)
+    var = sum((x - mean) ** 2 for x in xs) / (len(xs) - 1)
+    assert s.n == 500
+    assert math.isclose(s.mean, mean, rel_tol=1e-9)
+    assert math.isclose(s.var, var, rel_tol=1e-9)
+    assert s.min == min(xs) and s.max == max(xs)
+    # p95 over the retained window ~ exact order statistic
+    assert s.p95 == sorted(xs)[math.ceil(0.95 * len(xs)) - 1]
+
+
+def test_streaming_stats_p95_uses_recent_window():
+    s = StreamingStats(sample_cap=8)
+    for _ in range(100):
+        s.push(100.0)
+    for _ in range(8):
+        s.push(1.0)   # window now holds only the recent regime
+    assert s.p95 == 1.0
+    assert s.n == 108
+
+
+# ----------------------------------------------------- template profiles --
+def test_duration_profile_by_node_and_pool():
+    db = MonitoringDatabase()
+    for i in range(5):
+        db.record_task_placement("t", "n0", "p0", ok=True, duration=0.1,
+                                 memory_gb=2.0)
+    for i in range(5):
+        db.record_task_placement("t", "n1", "p0", ok=True, duration=0.4)
+    overall = db.duration_stats("t")
+    assert overall is not None and overall.n == 10
+    assert db.duration_stats("t", node="n0").mean == pytest.approx(0.1)
+    assert db.duration_stats("t", node="n1").mean == pytest.approx(0.4)
+    assert db.duration_stats("t", pool="p0").n == 10
+    assert db.duration_stats("t", node="missing") is None
+    assert db.memory_stats("t").mean == pytest.approx(2.0)
+
+
+def test_expected_duration_needs_min_samples():
+    db = MonitoringDatabase()
+    db.record_task_placement("t", "n0", "p", ok=True, duration=1.0)
+    db.record_task_placement("t", "n0", "p", ok=True, duration=1.0)
+    assert db.expected_duration("t") == 0.0        # < 3 samples
+    db.record_task_placement("t", "n0", "p", ok=True, duration=2.0)
+    assert db.expected_duration("t") == pytest.approx(2.0)   # p95
+
+
+def test_failures_do_not_pollute_duration_profile():
+    db = MonitoringDatabase()
+    for _ in range(3):
+        db.record_task_placement("t", "n0", "p", ok=False, duration=9.0)
+    assert db.duration_stats("t") is None
+
+
+# ------------------------------------------------------------- retention --
+def test_ring_retention_bounds_all_stores():
+    db = MonitoringDatabase(retention=16)
+    for i in range(100):
+        db.record_system_event("e", i=i)
+        db.record_task_event("task-x", "e", i=i)
+        db.record_resource_profile("n0", {"sim_mem_in_use_gb": float(i)})
+        db.report_failure(FailureReport(task_id=f"t{i}", exception=None,
+                                        exception_type="E", message="m"))
+    assert len(db.system_events) == 16
+    assert len(db.task_events["task-x"]) == 16
+    assert len(db.resource_profiles["n0"]) == 16
+    assert len(db.failures) == 16
+    # newest entries are the ones retained
+    assert db.system_events[-1]["i"] == 99
+    assert db.failures[-1].task_id == "t99"
+
+
+def test_retention_must_be_positive():
+    with pytest.raises(ValueError):
+        MonitoringDatabase(retention=0)
+
+
+# --------------------------------------------------- node health trends --
+def test_node_health_heartbeat_jitter():
+    db = MonitoringDatabase()
+    t0 = time.time()
+    for i in range(6):
+        db.heartbeat("n0", t0 + i * 0.05)
+    h = db.node_health("n0")
+    assert h.last_heartbeat == pytest.approx(t0 + 5 * 0.05)
+    assert h.heartbeat_mean_interval == pytest.approx(0.05)
+    assert h.heartbeat_jitter == pytest.approx(0.0, abs=1e-6)
+    assert h.heartbeat_samples == 5
+
+
+def test_node_health_memory_slope_and_oom_projection():
+    db = MonitoringDatabase()
+    for i in range(8):
+        db.record_resource_profile("n0", {"sim_mem_in_use_gb": 1.0 * i,
+                                          "sim_mem_capacity_gb": 16.0})
+        time.sleep(0.01)
+    h = db.node_health("n0")
+    assert h.mem_in_use_gb == 7.0
+    assert h.mem_capacity_gb == 16.0
+    assert h.mem_slope_gb_s > 0
+    # growing ~1GB / 10ms -> OOM well within a 1s horizon
+    assert h.trending_oom(1.0)
+    assert not h.trending_oom(0.0)
+
+
+def test_node_health_flat_memory_not_trending():
+    db = MonitoringDatabase()
+    for _ in range(8):
+        db.record_resource_profile("n0", {"sim_mem_in_use_gb": 4.0,
+                                          "sim_mem_capacity_gb": 16.0})
+        time.sleep(0.005)
+    assert not db.node_health("n0").trending_oom(10.0)
+
+
+# --------------------------------------------------------- radio parity --
+def test_failure_report_tcp_roundtrip_preserves_all_fields():
+    report = FailureReport(
+        task_id="t-42", exception=None, exception_type="MemoryError",
+        message="cannot allocate", node="n3", pool="small", worker="n3/w1",
+        resource_profile={"node_memory_gb": 192.0, "node_mem_in_use_gb": 10.0},
+        requirements={"memory_gb": 200.0, "packages": ["numpy"]},
+        retry_count=2, timestamp=123.5, log_tail=["oom killer"])
+
+    inproc = MonitoringDatabase()
+    inproc.report_failure(report)
+
+    tcp_db = MonitoringDatabase()
+    server = TCPRadioServer(tcp_db).start()
+    try:
+        radio = TCPRadio(server.address)
+        radio.send({"kind": "failure", "report": serialize_report(report)})
+        deadline = time.time() + 5
+        while time.time() < deadline and not tcp_db.failures:
+            time.sleep(0.01)
+        radio.close()
+    finally:
+        server.stop()
+
+    assert tcp_db.failures, "failure report never arrived over TCP"
+    got = tcp_db.failures[-1]
+    want = inproc.failures[-1]
+    for f in ("task_id", "exception_type", "message", "node", "pool",
+              "worker", "resource_profile", "requirements", "retry_count",
+              "timestamp", "log_tail"):
+        assert getattr(got, f) == getattr(want, f), f"field {f} dropped"

@@ -1,0 +1,401 @@
+"""Proactive resilience plane: task lifecycle, cancellation, predictive
+fast-fail, node drain, and the profile-driven application planes."""
+import time
+
+import pytest
+
+from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core.failures import (
+    ResourceStarvationError,
+    TaskCancelledError,
+    WorkerLostError,
+)
+from repro.core.policy import ResiliencePolicyEngine
+from repro.core.proactive import ProactiveConfig
+from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+from repro.engine.retry_api import SchedulingContext
+from repro.engine.task import TaskState
+
+
+@pytest.fixture()
+def mon():
+    return MonitoringDatabase()
+
+
+def _wait(pred, timeout=5.0, step=0.01):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if pred():
+            return True
+        time.sleep(step)
+    return pred()
+
+
+# ------------------------------------------------- task-state lifecycle --
+def test_worker_marks_running(mon):
+    cluster = Cluster.homogeneous(1, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        @task
+        def sleeper():
+            time.sleep(0.3)
+            return "ok"
+
+        fut = sleeper()
+        assert _wait(lambda: fut.record.state is TaskState.RUNNING, timeout=2)
+        assert fut.result(timeout=10) == "ok"
+        assert fut.record.state is TaskState.COMPLETED
+
+
+def test_straggler_watcher_matches_running_with_profile_estimate(mon):
+    """The straggler watcher fires on RUNNING tasks using the monitoring
+    database's profile-derived duration estimate (no static est)."""
+    nodes = [Node("fast", speed=1.0, workers_per_node=1),
+             Node("slug", speed=0.02, workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    # template profile: this task normally takes ~0.1s (>= 3 samples)
+    for _ in range(3):
+        mon.record_task_placement("work", "fast", "p", ok=True, duration=0.1)
+    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
+                        straggler_factor=2.0, heartbeat_period=0.03) as dfk:
+        from repro.engine.cluster import simwork
+
+        @task  # NOTE: no est_duration_s — the estimate comes from profiles
+        def work(x):
+            simwork(0.1)
+            return x
+
+        futs = [work(i) for i in range(2)]
+        t0 = time.time()
+        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
+        # without speculation the slug-placed task would take ~5s
+        assert time.time() - t0 < 4.0
+    assert dfk.stats["speculations"] >= 1
+
+
+def test_node_loss_fails_running_tasks(mon):
+    """_fail_tasks_on_node's RUNNING arm: a task mid-execution on a dying
+    node is failed by the heartbeat watcher and rerouted."""
+    cluster = Cluster.homogeneous(2, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        default_retries=3, heartbeat_period=0.03,
+                        heartbeat_threshold=3) as dfk:
+        @task
+        def slow(x):
+            time.sleep(0.5)
+            return x
+
+        futs = [slow(i) for i in range(2)]
+        # wait until both tasks are RUNNING (one per node), then kill one
+        assert _wait(lambda: sum(1 for f in futs
+                                 if f.record.state is TaskState.RUNNING) == 2,
+                     timeout=3)
+        cluster.all_nodes()[0].shutdown_hardware()
+        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
+    events = [e["event"] for e in mon.system_events]
+    assert "heartbeat_lost" in events
+
+
+# ------------------------------------------------------- cancellation --
+def test_cancel_queued_task_never_runs(mon):
+    cluster = Cluster.homogeneous(1, workers_per_node=1)
+    ran = []
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        @task
+        def sleeper():
+            time.sleep(0.4)
+            return "slept"
+
+        @task
+        def tracked():
+            ran.append(1)
+            return "ran"
+
+        first = sleeper()
+        assert _wait(lambda: first.record.state is TaskState.RUNNING, timeout=2)
+        queued = tracked()
+        assert _wait(lambda: queued.record.state is TaskState.SCHEDULED,
+                     timeout=2)
+        assert dfk.cancel_task(queued.task_id, reason="test cancel")
+        with pytest.raises(TaskCancelledError):
+            queued.result(timeout=10)
+        assert first.result(timeout=10) == "slept"
+        dfk.wait_all(timeout=10)
+    assert ran == []                          # really cancelled, never ran
+    assert dfk.stats["cancelled"] == 1
+    assert queued.record.state is TaskState.FAILED
+    assert queued.record.terminal_time > 0
+    # cancelling an already-resolved task is a no-op
+    assert not dfk.cancel_task(queued.task_id)
+
+
+def test_preempt_running_task_releases_memory_and_sets_future_once(mon):
+    nodes = [Node("a", memory_gb=8, workers_per_node=1),
+             Node("b", memory_gb=8, workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        @task(memory_gb=4)
+        def chunky(x):
+            time.sleep(0.3)
+            return x * 2
+
+        fut = chunky(21)
+        assert _wait(lambda: fut.record.state is TaskState.RUNNING, timeout=2)
+        node = cluster.find_node(dfk._assignment[fut.task_id][1])
+        assert node.mem_in_use_gb == 4.0
+        assert dfk.preempt_task(fut.task_id, reason="test migration")
+        assert fut.result(timeout=10) == 42       # single winner, no double-set
+        dfk.wait_all(timeout=10)
+    assert dfk.stats["preemptions"] == 1
+    # both the original's and the copy's reservations are released
+    assert _wait(lambda: all(n.mem_in_use_gb == 0.0
+                             for n in cluster.all_nodes()), timeout=5)
+
+
+def test_preempt_queued_task_moves_to_another_node(mon):
+    nodes = [Node("a", workers_per_node=1), Node("b", workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    with DataFlowKernel(cluster, monitor=mon) as dfk:
+        @task
+        def sleeper(x):
+            time.sleep(0.3)
+            return x
+
+        @task
+        def quick():
+            return "quick"
+
+        s1, s2 = sleeper(1), sleeper(2)       # occupy both workers
+        assert _wait(lambda: s1.record.state is TaskState.RUNNING
+                     and s2.record.state is TaskState.RUNNING, timeout=2)
+        q = quick()                            # queued behind a sleeper
+        assert _wait(lambda: q.record.state is TaskState.SCHEDULED, timeout=2)
+        before = dfk._assignment[q.task_id][1]
+        assert dfk.preempt_task(q.task_id, reason="rebalance")
+        assert q.result(timeout=10) == "quick"
+        after = dfk._assignment[q.task_id][1]
+        assert after != before                 # really moved off the node
+        dfk.wait_all(timeout=10)
+    assert dfk.stats["preemptions"] == 1
+
+
+def test_speculative_copy_cancelled_when_original_wins(mon):
+    nodes = [Node("a", workers_per_node=1), Node("b", workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    executions = []
+    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
+                        straggler_factor=1.5, heartbeat_period=0.02) as dfk:
+        @task
+        def hog():
+            time.sleep(1.0)
+            return "hog"
+
+        @task(est_duration_s=0.05)
+        def work():
+            executions.append(1)
+            time.sleep(0.3)   # looks like a straggler vs the 0.05s estimate
+            return "done"
+
+        # round-robin: hog occupies node a, work runs on node b; the
+        # speculative copy of work avoids b, so it queues behind the hog
+        hog_fut = hog()
+        assert _wait(lambda: hog_fut.record.state is TaskState.RUNNING,
+                     timeout=2)
+        fut = work()
+        assert fut.result(timeout=15) == "done"
+        assert dfk.stats["speculations"] >= 1
+        hog_fut.result(timeout=15)
+        dfk.wait_all(timeout=15)
+        # give the hog's worker a beat to drain (and skip) the cancelled copy
+        time.sleep(0.3)
+    assert executions == [1]   # the backup copy was cancelled before running
+
+
+# ---------------------------------------------------- predictive fast-fail --
+def test_predictive_fast_fail_at_dispatch(mon):
+    cluster = Cluster.homogeneous(2, memory_gb=8)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=True, default_retries=5) as dfk:
+        @task(memory_gb=500)
+        def monster():
+            return 1
+
+        with pytest.raises(ResourceStarvationError, match="fast-fail"):
+            monster().result(timeout=10)
+    assert dfk.stats["fast_fails"] == 1
+    assert dfk.stats["retries"] == 0          # failed before attempt 1
+    kinds = [d.kind for d in dfk.sentinel.decisions]
+    assert "fast_fail" in kinds
+
+
+def test_streak_fast_fail_cuts_retry_budget(mon):
+    from repro.engine.cluster import kill_current_worker
+
+    cluster = Cluster.homogeneous(3, workers_per_node=1)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=True, default_retries=5) as dfk:
+        @task
+        def doomed():
+            kill_current_worker("always dies")
+
+        with pytest.raises(WorkerLostError):
+            doomed().result(timeout=20)
+        rec = next(r for r in dfk.tasks.values() if r.name == "doomed")
+    # two identical failures on two adequate nodes -> streak veto; the
+    # remaining 4 retries of the budget are never burned
+    assert len(rec.attempts) == 2
+    assert dfk.stats["fast_fails"] == 1
+    assert any(d.kind == "streak_fail" for d in dfk.sentinel.decisions)
+
+
+def test_proactive_leaves_recoverable_contention_alone(mon):
+    """Transient contention is placement-fixable: the sentinel must not
+    fast-fail tasks that fit the node once it is idle."""
+    cluster = Cluster.homogeneous(1, memory_gb=8, workers_per_node=2)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=True, default_retries=6) as dfk:
+        @task(memory_gb=6)
+        def hold(t):
+            time.sleep(t)
+            return t
+
+        futs = [hold(0.2), hold(0.2)]
+        assert [f.result(timeout=15) for f in futs] == [0.2, 0.2]
+    assert dfk.stats["fast_fails"] == 0
+
+
+def test_proactive_fast_fail_respects_feasible_big_pool(mon):
+    """A 200GB task on a small/big testbed must NOT be fast-failed — the
+    big-memory pool can run it (rung-4 escalation, not a doomed task)."""
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=True, default_pool="small-mem",
+                        default_retries=3) as dfk:
+        @task(memory_gb=200)
+        def big():
+            return "fits on big"
+
+        assert big().result(timeout=15) == "fits on big"
+    assert dfk.stats["fast_fails"] == 0
+
+
+# --------------------------------------------------------------- drain --
+def test_drain_on_heartbeat_trend_then_undrain(mon):
+    cluster = Cluster.homogeneous(2, workers_per_node=1)
+    cfg = ProactiveConfig(period=0.02)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=cfg, heartbeat_period=0.03,
+                        heartbeat_threshold=5) as dfk:
+        # let heartbeats establish, then silence one node's agent while its
+        # workers stay alive — the "trending toward silence" scenario
+        time.sleep(0.2)
+        victim = cluster.all_nodes()[0]
+        victim.manager.pause_heartbeats()
+        assert _wait(lambda: victim.name in dfk.drained, timeout=5)
+        assert victim.name in dfk.denylist
+        events = [e["event"] for e in mon.system_events]
+        assert "node_drain" in events
+        # heartbeats resume -> the sentinel undrains (policy engine's
+        # resume rule must NOT have done it while drained)
+        victim.manager.resume_heartbeats()
+        assert _wait(lambda: victim.name not in dfk.drained, timeout=5)
+        assert victim.name not in dfk.denylist
+        assert "node_undrain" in [e["event"] for e in mon.system_events]
+    assert dfk.stats["drains"] == 1
+
+
+def test_drain_on_memory_trend_preempts_running_task(mon):
+    nodes = [Node("leaky", memory_gb=16, workers_per_node=1),
+             Node("stable", memory_gb=16, workers_per_node=1)]
+    cluster = Cluster([ResourcePool("p", nodes)])
+    cfg = ProactiveConfig(period=0.02, oom_horizon_s=2.0)
+    with DataFlowKernel(cluster, monitor=mon,
+                        retry_handler=wrath_retry_handler(),
+                        proactive=cfg, heartbeat_period=0.03) as dfk:
+        @task
+        def victim_task():
+            time.sleep(0.6)
+            return "survived"
+
+        # aim the first dispatch at the leaky node
+        fut = victim_task()
+        assert _wait(lambda: dfk._assignment.get(fut.task_id) is not None,
+                     timeout=2)
+        leaky_name = dfk._assignment[fut.task_id][1]
+        # stream a memory-growth trend for whichever node runs the task
+        for i in range(8):
+            mon.record_resource_profile(leaky_name,
+                                        {"sim_mem_in_use_gb": 2.0 * i,
+                                         "sim_mem_capacity_gb": 16.0})
+            time.sleep(0.02)
+        assert _wait(lambda: leaky_name in dfk.drained, timeout=5)
+        assert fut.result(timeout=15) == "survived"
+        dfk.wait_all(timeout=15)
+    assert dfk.stats["drains"] == 1
+    assert dfk.stats["preemptions"] >= 1
+    assert any(e["event"] == "node_drain" for e in mon.system_events)
+
+
+def test_policy_resume_rule_skips_drained_nodes(mon):
+    cluster = Cluster.homogeneous(2)
+    engine = ResiliencePolicyEngine()
+    mon.heartbeat("default-n000", time.time())
+    mon.heartbeat("default-n001", time.time())
+    ctx = SchedulingContext(
+        cluster=cluster, monitor=mon,
+        denylist={"default-n000", "default-n001"},
+        drained={"default-n000"})
+    engine._refresh_denylist(ctx)
+    assert "default-n000" in ctx.denylist     # drained: sentinel's call
+    assert "default-n001" not in ctx.denylist  # plain denylist: resumed
+
+
+# -------------------------------------------------- application planes --
+def test_train_shard_sizes_follow_throughput_profiles(tmp_path):
+    from repro.configs import get_smoke_config
+    from repro.optim import OptConfig
+    from repro.train import WrathTrainSupervisor
+
+    sup = WrathTrainSupervisor(
+        get_smoke_config("granite_3_2b"), OptConfig(lr=1e-3),
+        n_hosts=3, global_batch=8, ckpt_dir=str(tmp_path / "ck"))
+    hosts = sup.healthy_hosts()
+    # no history yet -> uniform split
+    assert sup._shard_sizes(hosts) == [3, 3, 2]
+    # host00 is 4x faster than host01; host02 unobserved
+    for _ in range(4):
+        sup.monitor.record_task_placement("grad_shard", "host00", "pod0",
+                                          ok=True, duration=0.01)
+        sup.monitor.record_task_placement("grad_shard", "host01", "pod0",
+                                          ok=True, duration=0.04)
+    sizes = sup._shard_sizes(hosts)
+    by_host = dict(zip([h.name for h in hosts], sizes))
+    assert sum(sizes) == 8
+    assert min(sizes) >= 1                     # every host keeps a probe
+    assert by_host["host00"] > by_host["host01"]
+
+
+def test_serve_health_gate_skips_failing_replica():
+    from repro.configs import get_smoke_config
+    from repro.serve import WrathServeDriver
+
+    driver = WrathServeDriver(get_smoke_config("granite_3_2b"), n_replicas=3)
+    # replica0 has only ever failed -> the gate must avoid it
+    driver.monitor.record_task_placement("decode_batch", "replica0", "serve",
+                                         ok=False)
+    driver.monitor.record_task_placement("decode_batch", "replica0", "serve",
+                                         ok=False)
+    from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+    rec = new_task_record(TaskDef(lambda: None, "decode_batch",
+                                  ResourceSpec(), 0), (), {},
+                          default_retries=0)
+    picks = {driver._pick_replica(rec).name for _ in range(6)}
+    assert "replica0" not in picks
+    health = driver.replica_health()
+    assert health["replica0"]["success_rate"] == 0.0
+    assert set(health) == {"replica0", "replica1", "replica2"}

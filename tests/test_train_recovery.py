@@ -1,9 +1,5 @@
 """Training-plane WRATH: recovery from host loss, NaN, stragglers, OOM;
 checkpoint-resume continuity; elastic re-meshing."""
-import shutil
-
-import pytest
-
 from repro.configs import get_smoke_config
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor

@@ -11,7 +11,7 @@ from repro.core.failures import (
     HardwareShutdownError,
     RandomSeedError,
 )
-from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+from repro.engine import Cluster, DataFlowKernel, task
 from repro.engine.task import ResourceSpec, TaskDef, new_task_record
 
 

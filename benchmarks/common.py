@@ -5,7 +5,8 @@ import statistics
 from typing import Any, Callable
 
 from repro.apps import run_app
-from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core import MonitoringDatabase
+from repro.engine.policies import ProactivePolicy, WrathPolicy
 
 
 def repeated(fn: Callable[[int], Any], repeats: int) -> list[Any]:
@@ -25,10 +26,14 @@ def csv_row(name: str, us_per_call: float, derived: str) -> str:
 def run_once(app: str, *, mode: str, injector, cluster_fn, default_pool,
              scale: str = "tiny", retries: int = 2, timeout: float = 120.0):
     """One app run in ``mode``: "baseline" (Parsl default retry), "wrath"
-    (reactive resilience module) or "proactive" (wrath + sentinel)."""
-    handler = wrath_retry_handler() if mode in ("wrath", "proactive") else None
-    return run_app(app, cluster_fn(), retry_handler=handler,
+    (reactive resilience module) or "proactive" (wrath + sentinel) —
+    expressed as the equivalent policy stacks of the task-hierarchy API."""
+    policy = {
+        "baseline": [],
+        "wrath": [WrathPolicy()],
+        "proactive": [WrathPolicy(), ProactivePolicy()],
+    }[mode]
+    return run_app(app, cluster_fn(), policy=policy,
                    monitor=MonitoringDatabase(), injector=injector,
-                   proactive=mode == "proactive",
                    scale=scale, default_pool=default_pool,
                    default_retries=retries, wait_timeout=timeout)

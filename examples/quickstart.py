@@ -1,17 +1,24 @@
-"""Quickstart: the WRATH-enabled TBPP engine in ~60 lines.
+"""Quickstart: the task-hierarchy API in ~70 lines.
 
 Builds the paper's §VII-C heterogeneous testbed (192 GB nodes + one 6 TB
-node), runs a small task DAG, and injects a memory-hungry task that OOMs
-on the default pool.  Watch WRATH categorize the failure (runtime layer →
+node), then runs a small DAG inside a :class:`Workflow` scope with a
+composable resilience-policy stack.  A memory-hungry task OOMs on the
+default pool; watch WRATH categorize the failure (runtime layer →
 resource starvation → capacity mismatch) and hierarchically retry onto
-the big-memory pool (rung 4), while the same failure kills the run under
-Parsl-style baseline retry.
+the big-memory pool (rung 4) — while the same workload under an empty
+stack (Parsl-style baseline retry) burns its budget in place and dies.
 
     PYTHONPATH=src python examples/quickstart.py
 """
-from repro.apps.base import run_app  # noqa: F401  (import check)
-from repro.core import MonitoringDatabase, wrath_retry_handler
-from repro.engine import Cluster, DataFlowKernel, task
+from repro.api import (
+    Cluster,
+    DataFlowKernel,
+    DependencyError,
+    MonitoringDatabase,
+    WrathPolicy,
+    replay,
+    task,
+)
 
 
 @task(memory_gb=1)
@@ -31,31 +38,34 @@ def top_word(emb: dict[str, float]) -> str:
 
 def main() -> None:
     cluster = Cluster.paper_testbed(small_nodes=3, big_nodes=1)
-    monitor = MonitoringDatabase()
-    handler = wrath_retry_handler()
+    wrath = WrathPolicy()
 
-    with DataFlowKernel(cluster, monitor=monitor, retry_handler=handler,
-                        default_pool="small-mem", default_retries=2) as dfk:
-        toks = tokenize("wrath makes task based parallel programming resilient")
-        emb = embed_corpus(toks)     # OOMs on small-mem, recovers on big-mem
-        best = top_word(emb)
+    with DataFlowKernel(cluster, monitor=MonitoringDatabase(),
+                        policy=[wrath], default_pool="small-mem") as dfk:
+        # a named scope: per-scope retry default, scope-wide wait()/stats()
+        with dfk.workflow("quickstart", retries=2) as wf:
+            toks = tokenize("wrath makes task based parallel programming resilient")
+            emb = embed_corpus(toks)     # OOMs on small-mem, recovers on big-mem
+            best = top_word(emb)
         print("longest word:", best.result(timeout=30))
+        wf.wait(timeout=30)
         print("\nWRATH decisions:")
-        for d in handler.decisions:
+        for d in wrath.decisions:
             print(f"  [{d['layer']}/{d['failure_type']}] -> {d['action']} "
                   f"(rung {d['rung']}): {d['reason'][:80]}")
-        print("\nstats:", {k: round(v, 4) for k, v in dfk.stats.items() if v})
+        print("\nscope stats:", wf.stats())
+        print("engine stats:", {k: round(v, 4) for k, v in dfk.stats.items() if v})
 
-    # same workload, Parsl-style baseline: retries in place and fails
-    from repro.core import DependencyError
-
+    # same workload on an explicit baseline stack: replay(3) retries in
+    # place — HPX-style task replay, no resource analysis — and fails
     with DataFlowKernel(Cluster.paper_testbed(small_nodes=3, big_nodes=1),
                         monitor=MonitoringDatabase(),
-                        default_pool="small-mem", default_retries=2) as dfk:
+                        default_pool="small-mem") as dfk:
         try:
-            top_word(embed_corpus(tokenize("same workload"))).result(timeout=30)
+            doomed = embed_corpus.options(policy=replay(3))(tokenize("same workload"))
+            top_word(doomed).result(timeout=30)
         except (MemoryError, DependencyError) as e:
-            print(f"\nbaseline failed as expected after "
+            print(f"\nbaseline replay(3) failed as expected after "
                   f"{dfk.stats['retries']:.0f} wasted retries: "
                   f"{type(e).__name__}: {e}")
 

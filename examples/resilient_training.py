@@ -14,6 +14,7 @@ spare; the recovery behaviour is identical at every scale.
 import argparse
 import shutil
 
+from repro.api import WrathPolicy, replay
 from repro.configs import get_smoke_config
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor
@@ -39,7 +40,10 @@ def main() -> None:
     sup = WrathTrainSupervisor(
         cfg, OptConfig(lr=3e-3, warmup_steps=10, total_steps=args.steps),
         n_hosts=args.hosts, global_batch=args.batch, seq_len=args.seq,
-        ckpt_dir=args.ckpt, ckpt_every=10)
+        ckpt_dir=args.ckpt, ckpt_every=10,
+        # composable stack: two HPX-style replays first, then WRATH's
+        # taxonomy-driven placement takes over (first decisive wins)
+        policy=[replay(2, on_exhausted="defer"), WrathPolicy()])
 
     third = args.steps // 3
     events = [

@@ -1,7 +1,10 @@
 """Run the five TaPS-analog applications under failure injection.
 
 Reproduces the paper's experimental setup in miniature: pick an app, a
-failure type and a rate; compare WRATH against Parsl-style baseline retry.
+failure type and a rate; compare resilience-policy stacks — WRATH
+(``[WrathPolicy()]``) against Parsl-style baseline retry (the empty
+stack).  Each app run executes inside a :class:`~repro.api.Workflow`
+scope named after the app (see ``repro.apps.base.run_app``).
 
     PYTHONPATH=src python examples/taps_workflows.py --failure memory --rate 0.3
     PYTHONPATH=src python examples/taps_workflows.py --app cholesky \
@@ -9,9 +12,8 @@ failure type and a rate; compare WRATH against Parsl-style baseline retry.
 """
 import argparse
 
+from repro.api import Cluster, MonitoringDatabase, WrathPolicy
 from repro.apps import APPS, run_app
-from repro.core import MonitoringDatabase, wrath_retry_handler
-from repro.engine import Cluster
 from repro.injection import FAILURE_TYPES, FailureInjector, NoInjector
 
 
@@ -51,7 +53,7 @@ def main() -> None:
                    FailureInjector(args.failure, rate=args.rate,
                                    seed=args.seed, app_tag=f"{app}:{mode}"))
             r = run_app(app, cl,
-                        retry_handler=wrath_retry_handler() if mode == "wrath" else None,
+                        policy=[WrathPolicy()] if mode == "wrath" else [],
                         monitor=MonitoringDatabase(), injector=inj,
                         scale=args.scale, default_pool=pool,
                         default_retries=2, wait_timeout=120)

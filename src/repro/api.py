@@ -1,0 +1,89 @@
+"""``repro.api`` — the task-hierarchy facade: one import for everything.
+
+The paper's thesis is that resilience must follow the *layered structure*
+of TBPP frameworks (WRATH §III–§V).  This module is that structure as an
+API::
+
+    from repro.api import (
+        Cluster, DataFlowKernel, Workflow, task,
+        WrathPolicy, ProactivePolicy, replay, replicate,
+    )
+
+    @task(memory_gb=2)
+    def f(x):
+        return x + 1
+
+    with DataFlowKernel(Cluster.paper_testbed(),
+                        policy=[WrathPolicy(), ProactivePolicy()]) as dfk:
+        with dfk.workflow("pipeline", pool="small-mem",
+                          propagate="siblings") as wf:
+            with wf.workflow("stage1", policy=replay(3)) as stage:
+                futs = [f(i) for i in range(8)]
+            wf.wait(timeout=30)
+
+Three ideas, one surface:
+
+* **Workflow scopes** (:class:`Workflow`) make the task hierarchy
+  explicit: named, nestable, with per-scope defaults (pool / retries /
+  node), scope-wide ``cancel()``/``wait()``/``stats()``, and failure
+  propagation (``propagate="none"|"siblings"|"ancestors"``).
+* **Composable resilience** (:class:`ResiliencePolicy`,
+  :class:`PolicyStack`): middleware with lifecycle hooks, resolved per
+  invocation (task > workflow chain > engine), first decisive
+  :class:`RetryDecision` wins.
+* **HPX-style combinators**: :func:`replay` (re-execute up to *n*
+  times) and :func:`replicate` (race *n* copies, first ``validate``-d
+  result wins), per Gupta et al.'s task-level resiliency primitives.
+"""
+from repro.core.failures import (
+    DependencyError,
+    FailureReport,
+    TaskCancelledError,
+)
+from repro.core.monitoring import MonitoringDatabase
+from repro.core.proactive import ProactiveConfig, ProactiveSentinel
+from repro.engine.cluster import Cluster, Node, ResourcePool
+from repro.engine.dfk import DataFlowKernel
+from repro.engine.policies import (
+    PolicyStack,
+    ProactivePolicy,
+    ReplayPolicy,
+    ReplicatePolicy,
+    ReplicationError,
+    ResiliencePolicy,
+    RetryHandlerPolicy,
+    StragglerPolicy,
+    WrathPolicy,
+    normalize_policies,
+    replay,
+    replicate,
+)
+from repro.engine.retry_api import Action, RetryDecision, SchedulingContext
+from repro.engine.scheduler import SCHEDULERS, Scheduler, make_scheduler
+from repro.engine.task import (
+    AppFuture,
+    ResourceSpec,
+    TaskDef,
+    TaskRecord,
+    TaskState,
+    task,
+)
+from repro.engine.workflow import PROPAGATE_MODES, Workflow
+
+__all__ = [
+    # engine & hierarchy
+    "Cluster", "Node", "ResourcePool", "DataFlowKernel", "Workflow",
+    "PROPAGATE_MODES", "task", "TaskDef", "TaskRecord", "TaskState",
+    "AppFuture", "ResourceSpec",
+    # resilience policies
+    "ResiliencePolicy", "PolicyStack", "RetryHandlerPolicy", "WrathPolicy",
+    "ProactivePolicy", "StragglerPolicy", "ReplayPolicy", "ReplicatePolicy",
+    "ReplicationError", "normalize_policies", "replay", "replicate",
+    # decisions & context
+    "Action", "RetryDecision", "SchedulingContext", "FailureReport",
+    "DependencyError", "TaskCancelledError",
+    # monitoring & proactive tunables
+    "MonitoringDatabase", "ProactiveConfig", "ProactiveSentinel",
+    # placement
+    "Scheduler", "SCHEDULERS", "make_scheduler",
+]

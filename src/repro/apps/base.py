@@ -10,6 +10,7 @@ from typing import Any, Callable
 
 from repro.engine.cluster import Cluster
 from repro.engine.dfk import DataFlowKernel
+from repro.engine.policies import normalize_policies, shim_legacy_kwargs
 from repro.injection.engines import NoInjector
 
 # registry: name -> submit(injector, scale, **kw) -> list[AppFuture]
@@ -54,6 +55,7 @@ def run_app(
     app: str,
     cluster: Cluster,
     *,
+    policy: Any = None,
     retry_handler=None,
     monitor=None,
     injector=None,
@@ -66,24 +68,34 @@ def run_app(
 ) -> AppRunResult:
     """Execute one application run and collect the §VII-A metrics.
 
-    ``proactive=True`` attaches the :class:`~repro.core.proactive.
-    ProactiveSentinel` to the DFK (predictive fast-fail + node drain); the
-    per-task time-to-failure of terminally failed tasks is reported in
-    ``extra["ttf_per_task_mean"]`` either way, so reactive and proactive
-    runs are directly comparable (fig 4's normalized TTF).
+    Resilience is configured with ``policy=`` — a
+    :class:`~repro.engine.policies.ResiliencePolicy`, a list of them, or
+    a bare retry-handler callable.  The historical ``retry_handler=`` /
+    ``proactive=`` arguments still work: they are adapted into
+    equivalent stack members (appended after ``policy``'s), so both
+    spellings drive identical decisions.  Each run executes inside a
+    :class:`~repro.engine.workflow.Workflow` scope named after the app;
+    its subtree stats land in ``extra["workflow"]``.  The per-task
+    time-to-failure of terminally failed tasks is reported in
+    ``extra["ttf_per_task_mean"]`` for every mode, so reactive and
+    proactive runs are directly comparable (fig 4's normalized TTF).
     """
     injector = injector or NoInjector()
     submit = APPS[app]
+    # run_app's own retry_handler=/proactive= kwargs are part of the same
+    # deprecated surface: external callers get the migration warning too
+    parts = normalize_policies(policy) + shim_legacy_kwargs(
+        retry_handler=retry_handler, proactive=proactive)
     t0 = time.time()
     error: str | None = None
     ttf: float | None = None
     success = True
     with DataFlowKernel(
-        cluster, retry_handler=retry_handler, monitor=monitor,
+        cluster, policy=parts, monitor=monitor,
         default_pool=default_pool, default_retries=default_retries,
-        proactive=proactive,
     ) as dfk:
-        futures = submit(injector=injector, scale=scale, **app_kwargs)
+        with dfk.workflow(app) as wf:
+            futures = submit(injector=injector, scale=scale, **app_kwargs)
         for f in futures:
             try:
                 f.result(timeout=wait_timeout)
@@ -99,7 +111,7 @@ def run_app(
         overhead = dfk.stats["wrath_overhead_s"] / makespan if makespan > 0 else 0.0
         stats = dict(dfk.stats)
         task_ttfs = dfk.failed_task_ttfs()
-    extra: dict[str, Any] = {}
+    extra: dict[str, Any] = {"workflow": wf.stats()}
     if task_ttfs:
         extra["ttf_per_task_mean"] = sum(task_ttfs) / len(task_ttfs)
         extra["failed_tasks"] = len(task_ttfs)

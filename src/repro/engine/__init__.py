@@ -3,7 +3,10 @@
 This is the Parsl-analog layer of the reproduction (paper §VI-A): a real,
 runnable task-based parallel programming engine with futures and DAG
 dependency resolution, executing on a simulated heterogeneous cluster.
-WRATH (``repro.core``) plugs into the DataFlowKernel as the retry handler.
+Resilience plugs in as a composable :class:`PolicyStack`
+(:mod:`repro.engine.policies`); the task hierarchy is first-class via
+:class:`Workflow` scopes (:mod:`repro.engine.workflow`).  The curated
+user-facing surface is re-exported by :mod:`repro.api`.
 """
 from repro.engine.task import task, TaskDef, TaskRecord, AppFuture, TaskState, ResourceSpec
 from repro.engine.cluster import Cluster, ResourcePool, Node, Worker
@@ -18,6 +21,21 @@ from repro.engine.scheduler import (
     Scheduler,
     make_scheduler,
 )
+from repro.engine.policies import (
+    PolicyStack,
+    ProactivePolicy,
+    ReplayPolicy,
+    ReplicatePolicy,
+    ReplicationError,
+    ResiliencePolicy,
+    RetryHandlerPolicy,
+    StragglerPolicy,
+    WrathPolicy,
+    normalize_policies,
+    replay,
+    replicate,
+)
+from repro.engine.workflow import Workflow
 from repro.engine.dfk import DataFlowKernel
 
 __all__ = [
@@ -42,4 +60,18 @@ __all__ = [
     "HistoryAwareScheduler",
     "SCHEDULERS",
     "make_scheduler",
+    # task-hierarchy API
+    "Workflow",
+    "ResiliencePolicy",
+    "PolicyStack",
+    "RetryHandlerPolicy",
+    "WrathPolicy",
+    "ProactivePolicy",
+    "StragglerPolicy",
+    "ReplayPolicy",
+    "ReplicatePolicy",
+    "ReplicationError",
+    "normalize_policies",
+    "replay",
+    "replicate",
 ]

@@ -206,6 +206,11 @@ class Worker:
         # the straggler watcher and node-loss sweep key off this transition
         if rec.state in (TaskState.SCHEDULED, TaskState.RETRYING):
             rec.state = TaskState.RUNNING
+            if rec.on_running is not None:
+                try:
+                    rec.on_running(rec)
+                except Exception:  # noqa: BLE001 - a policy bug must not kill the worker
+                    pass
         err: BaseException | None = None
         result: Any = None
         try:

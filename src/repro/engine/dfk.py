@@ -43,12 +43,25 @@ The framework-side watchers are periodic events:
 Batched submission with backpressure is available via :meth:`map`: the
 number of outstanding (submitted, unfinished) tasks is capped so a large
 sweep cannot flood the executors' queues.
+
+Since the task-hierarchy API redesign, resilience is configured through a
+**composable policy stack** (:mod:`repro.engine.policies`): pass
+``policy=`` a :class:`~repro.engine.policies.ResiliencePolicy` (or a list
+of them) and every lifecycle transition — submit, dispatch, running,
+failure, result, periodic tick — flows through the stack, with the first
+decisive :class:`RetryDecision` winning and Parsl's baseline retry as the
+terminal fallback.  Stacks resolve per task invocation: per-call policies
+(``TaskDef.options(policy=...)``) run first, then the enclosing
+:class:`~repro.engine.workflow.Workflow` chain, then the engine stack.
+The historical kwargs — ``retry_handler=``, ``proactive=``,
+``speculative_execution=`` — still work but are deprecated shims that
+adapt into single-element policy stacks.
 """
 from __future__ import annotations
 
 import threading
 import time
-from typing import TYPE_CHECKING, Any, Iterable
+from typing import Any, Iterable
 
 from repro.core.failures import (
     DependencyError,
@@ -60,17 +73,27 @@ from repro.core.failures import (
 from repro.engine.cluster import Cluster
 from repro.engine.events import EventLoop
 from repro.engine.executor import Executor
+from repro.engine.policies import (
+    PolicyStack,
+    ProactivePolicy,
+    ResiliencePolicy,
+    normalize_policies,
+    shim_legacy_kwargs,
+)
 from repro.engine.retry_api import (
     Action,
     RetryDecision,
     SchedulingContext,
-    baseline_retry_handler,
 )
 from repro.engine.scheduler import RoundRobinScheduler, Scheduler
 from repro.engine.task import AppFuture, TaskDef, TaskRecord, TaskState, new_task_record
+from repro.engine.workflow import Workflow
 
-if TYPE_CHECKING:  # pragma: no cover - import cycle guard
-    from repro.core.proactive import ProactiveConfig, ProactiveSentinel
+
+# map() internals: distinguish "no positional args" and "iterator ran dry"
+# from legitimate user values (None, (), ...)
+_NO_ARGS = object()
+_EXHAUSTED = object()
 
 
 def _iter_futures(obj: Any):
@@ -104,26 +127,39 @@ class DataFlowKernel:
         self,
         cluster: Cluster,
         *,
-        retry_handler=None,
+        policy: Any = None,
+        retry_handler=None,              # deprecated: use policy=
         monitor=None,
         scheduler: Scheduler | None = None,
-        proactive: "bool | ProactiveConfig | ProactiveSentinel" = False,
+        proactive: Any = False,          # deprecated: use policy=[ProactivePolicy()]
         default_retries: int = 2,
         default_pool: str | None = None,
         heartbeat_period: float = 0.05,
         heartbeat_threshold: float = 5.0,   # missed periods before node is lost
-        speculative_execution: bool = False,
+        speculative_execution: bool = False,  # deprecated: StragglerPolicy
         straggler_factor: float = 3.0,
         map_backpressure: int | None = None,
+        _warn_legacy: bool = True,
     ):
         self.cluster = cluster
         self.monitor = monitor
-        self.retry_handler = retry_handler or baseline_retry_handler
         self.scheduler = scheduler or RoundRobinScheduler()
-        # lazy import: repro.core.proactive imports repro.engine.retry_api,
-        # which initializes this package — a module-level import would cycle
-        from repro.core.proactive import make_sentinel
-        self.sentinel = make_sentinel(proactive)
+        # canonical resilience configuration: an ordered policy stack.  The
+        # deprecated kwargs adapt into equivalent single-element stacks
+        # appended after any explicitly-passed policies.
+        self.policies = PolicyStack(
+            normalize_policies(policy)
+            + shim_legacy_kwargs(
+                retry_handler=retry_handler, proactive=proactive,
+                speculative_execution=speculative_execution,
+                straggler_factor=straggler_factor, warn=_warn_legacy),
+            on_error=self._on_event_error)
+        # legacy introspection points: the adapted handler/sentinel (tests
+        # and tooling read dfk.sentinel.decisions)
+        self.retry_handler = retry_handler
+        self.sentinel = next(
+            (p.sentinel for p in self.policies if isinstance(p, ProactivePolicy)),
+            None)
         self.default_retries = default_retries
         self.default_pool = default_pool or next(iter(cluster.pools))
         self.heartbeat_period = heartbeat_period
@@ -137,13 +173,38 @@ class DataFlowKernel:
         self.denylist: set[str] = set()
         self.drained: set[str] = set()   # sentinel-drained subset of denylist
         self._assignment: dict[str, tuple[str, str]] = {}  # task -> (pool, node)
-        self._children: dict[str, list[TaskRecord]] = {}
         self._speculated: set[str] = set()
-        # task -> (backup copy record, node it was queued on); the loser of
-        # the race is cancelled when the winner finishes
-        self._spec_copies: dict[str, tuple[TaskRecord, str | None]] = {}
+        # task -> [(racing copy record, node it was queued on), ...]; every
+        # losing attempt is cancelled when the winner resolves the task
+        self._spec_copies: dict[str, list[tuple[TaskRecord, str | None]]] = {}
+        self._replicated: set[str] = set()  # tasks whose replicas launched
+        # task -> number of racing copies still in flight; a terminal
+        # failure of the original DEFERS while copies remain (a healthy
+        # replica may still win — HPX replicate semantics), resolving with
+        # the stashed error only once every attempt has failed
+        self._live_copies: dict[str, int] = {}
+        self._pending_terminal: dict[str, BaseException] = {}
         self._done_first: dict[str, bool] = {}
         self._resume_logged: set[str] = set()  # nodes whose resume was recorded
+        self._workflows: list[Workflow] = []
+        # per-call policies (TaskDef.options(policy=)) bound to this engine;
+        # keyed by id so bind/unbind runs once per object.  Tickers among
+        # them are tracked separately so the 50 ms policy tick stays
+        # O(tickers), not O(all policies ever used)
+        self._adhoc_bound: dict[int, ResiliencePolicy] = {}
+        self._adhoc_tickers: list[ResiliencePolicy] = []
+        # ticker policies contributed by workflow scopes, collected
+        # incrementally at registration so the 50 ms tick never rescans
+        # the (append-only) workflow list
+        self._workflow_tickers: list[ResiliencePolicy] = []
+        self._ticker_ids: set[int] = set()
+        # resolved-stack cache keyed by the identity tuple of the extra
+        # (task + workflow) parts: a policied workflow's map() submits
+        # thousands of tasks but builds one PolicyStack.  Cached stacks
+        # hold strong refs to their policies, keeping the ids stable.
+        self._stack_cache: dict[tuple, PolicyStack] = {}
+        self._started = False
+        self._shutting_down = False
 
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
@@ -156,6 +217,8 @@ class DataFlowKernel:
             "restarts": 0, "speculations": 0, "start_time": 0.0,
             # proactive plane
             "fast_fails": 0, "preemptions": 0, "drains": 0, "cancelled": 0,
+            # replicate(n) racing copies
+            "replicas": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -188,19 +251,82 @@ class DataFlowKernel:
         self.events.start()
         self.events.schedule_periodic(
             self.heartbeat_period, self._check_heartbeats, name="heartbeat-check")
-        if self.speculative_execution:
-            self.events.schedule_periodic(
-                self.heartbeat_period, self._check_stragglers,
-                name="straggler-check")
-        if self.sentinel is not None:
-            self.sentinel.attach(self)
+        self.events.schedule_periodic(
+            self.heartbeat_period, self._policy_tick, name="policy-tick")
+        self._started = True
+        self.policies.bind(self)
+        for wf in list(self._workflows):
+            for p in wf.policies:
+                p.bind(self)
 
     def shutdown(self) -> None:
-        if self.sentinel is not None:
-            self.sentinel.detach()
+        self._shutting_down = True
+        self.policies.unbind()
+        for wf in list(self._workflows):
+            for p in wf.policies:
+                p.unbind()
+        for p in self._adhoc_bound.values():
+            p.unbind()
         self.events.stop()
+        # resolve every future the engine can never run again, so no
+        # AppFuture.result() call hangs on a dead kernel.  RUNNING tasks
+        # are left alone: their worker finishes the in-flight fn and
+        # delivers the real result (a post-shutdown *failure* is made
+        # terminal by _route_failure's shutting-down guard, so those
+        # futures resolve too instead of waiting on a stopped event loop).
+        pending = [rec for rec in list(self.tasks.values())
+                   if rec.future is not None and not rec.future.done()
+                   and rec.state is not TaskState.RUNNING]
+        for rec in pending:
+            self.cancel_task(
+                rec.task_id, reason="DataFlowKernel shut down",
+                exc=RuntimeError(
+                    f"DataFlowKernel shut down while task {rec.task_id} "
+                    f"({rec.name}) was {rec.state.value}"))
+        # terminal failures stashed while racing copies were in flight:
+        # copies that never got to run can no longer save the task
+        for task_id, err in list(self._pending_terminal.items()):
+            self._pending_terminal.pop(task_id, None)
+            rec = self.tasks.get(task_id)
+            if rec is not None:
+                self._fail_terminally(rec, err)
         for ex in self.executors.values():
             ex.stop()
+        self._started = False
+
+    def workflow(self, name: str, **kwargs: Any) -> Workflow:
+        """Create a top-level :class:`Workflow` scope on this kernel."""
+        return Workflow(name, dfk=self, **kwargs)
+
+    def _register_workflow(self, wf: Workflow) -> None:
+        self._workflows.append(wf)
+        for p in wf.policies:
+            if (type(p).on_tick is not ResiliencePolicy.on_tick
+                    and id(p) not in self._ticker_ids):
+                self._ticker_ids.add(id(p))
+                self._workflow_tickers.append(p)
+        if self._started:
+            for p in wf.policies:
+                p.bind(self)
+
+    def _policy_tick(self) -> None:
+        """Periodic ``on_tick`` fan-out over engine + workflow policies."""
+        tickers = list(self.policies._tickers)
+        seen = {id(p) for p in tickers}
+        for p in (*self._workflow_tickers, *self._adhoc_tickers):
+            if id(p) not in seen:
+                seen.add(id(p))
+                tickers.append(p)
+        if not tickers:
+            return
+        t0 = time.perf_counter()
+        ctx = self.context()
+        for p in tickers:
+            try:
+                p.on_tick(ctx)
+            except Exception as err:  # noqa: BLE001 - a policy bug must not kill the tick
+                self._on_event_error("policy-tick", err)
+        self.stats["wrath_overhead_s"] += time.perf_counter() - t0
 
     def context(self) -> SchedulingContext:
         return SchedulingContext(
@@ -218,8 +344,48 @@ class DataFlowKernel:
     # ------------------------------------------------------------------ #
     # submission & dependency resolution
     # ------------------------------------------------------------------ #
+    def _resolve_stack(self, td: TaskDef, wf: Workflow | None) -> PolicyStack:
+        """Per-invocation policy stack: task > workflow chain > engine."""
+        parts = normalize_policies(td.policy)
+        if wf is not None:
+            parts = parts + wf.chain_policies()
+        if not parts:
+            return self.policies          # common case: share the engine stack
+        key = tuple(id(p) for p in parts)
+        cached = self._stack_cache.get(key)
+        if cached is not None:
+            return cached
+        # per-call policies must participate in the engine lifecycle like
+        # engine/workflow ones: bind them (idempotent) and register any
+        # tickers so the periodic policy tick reaches them too
+        for p in parts:
+            if id(p) not in self._adhoc_bound:
+                self._adhoc_bound[id(p)] = p
+                p.bind(self)
+                if type(p).on_tick is not ResiliencePolicy.on_tick:
+                    self._adhoc_tickers.append(p)
+        stack = PolicyStack(parts + self.policies.policies,
+                            on_error=self._on_event_error)
+        self._stack_cache[key] = stack
+        return stack
+
     def submit(self, td: TaskDef, args: tuple, kwargs: dict) -> AppFuture:
-        rec = new_task_record(td, args, kwargs, default_retries=self.default_retries)
+        # hierarchy resolution: an explicit options(workflow=...) pin wins,
+        # else the thread's innermost active scope (None = engine root)
+        wf = td.workflow if td.workflow is not None else Workflow.current()
+        default_retries = self.default_retries
+        if td.max_retries is None and wf is not None:
+            wf_retries = wf.effective_retries()
+            if wf_retries is not None:
+                default_retries = wf_retries
+        rec = new_task_record(td, args, kwargs, default_retries=default_retries)
+        rec.workflow = wf
+        rec.pool_default = td.pool or (wf.effective_pool() if wf else None)
+        if wf is not None and rec.target_node is None:
+            rec.target_node = wf.effective_node()
+        rec.stack = self._resolve_stack(td, wf)
+        if rec.stack.wants_running:
+            rec.on_running = self._notify_running
         deps = list({f.task_id: f for f in _iter_futures((args, kwargs))}.values())
         rec.depends_on = [f.record for f in deps]
         with self._lock:
@@ -227,11 +393,22 @@ class DataFlowKernel:
             self.stats["submitted"] += 1
             self._outstanding += 1
             pending = [f for f in deps if not f.done()]
-            for f in pending:
-                self._children.setdefault(f.task_id, []).append(rec)
+        if wf is not None:
+            wf._add(rec)
         if self.monitor is not None:
-            self.monitor.record_task_event(rec.task_id, "submitted", name=rec.name,
-                                           resources=rec.resources.asdict())
+            scope = {"workflow": wf.path} if wf is not None else {}
+            self.monitor.record_task_event(
+                rec.task_id, "submitted", name=rec.name,
+                resources=rec.resources.asdict(), **scope)
+        if wf is not None and wf.cancelled:
+            # submissions into a cancelled scope resolve immediately
+            self.cancel_task(rec.task_id,
+                             reason=f"workflow {wf.path!r} is cancelled")
+            return rec.future  # type: ignore[return-value]
+        if rec.stack._submitters:
+            t0 = time.perf_counter()
+            rec.stack.on_submit(rec, self.context())
+            self.stats["wrath_overhead_s"] += time.perf_counter() - t0
         if not pending:
             if self._claim_ready(rec):
                 self.events.call_soon(self._maybe_dispatch, rec, name="dispatch")
@@ -240,32 +417,74 @@ class DataFlowKernel:
                 f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
         return rec.future  # type: ignore[return-value]
 
-    def map(self, td: TaskDef, arg_iter: Iterable[Any], *,
+    def _notify_running(self, rec: TaskRecord) -> None:
+        """Worker RUNNING-transition callback -> policy ``on_running``."""
+        stack = rec.stack
+        if stack is not None:
+            stack.on_running(rec, self.context())
+
+    def map(self, td: TaskDef, arg_iter: Iterable[Any] | None = None, *,
+            kwargs_iter: Iterable[dict] | None = None, unpack: bool = True,
             max_outstanding: int | None = None) -> list[AppFuture]:
         """Batched submission with an outstanding-task backpressure cap.
 
-        Each element of ``arg_iter`` becomes one task invocation (a tuple
-        element is splatted as positional args, anything else is passed as
-        the single argument).  At most ``max_outstanding`` (default: the
-        DFK's ``map_backpressure``; ``None`` = unlimited) tasks from this
-        map are outstanding — submitted but unfinished — at once; further
+        Each element of ``arg_iter`` becomes one task invocation.  With
+        ``unpack=True`` (the historical default) a *tuple* element is
+        splatted as positional args; with ``unpack=False`` every element
+        — tuples included — is passed as the single positional argument.
+        ``kwargs_iter`` supplies per-invocation keyword arguments: a
+        parallel iterable of dicts (zipped 1:1 with ``arg_iter``; lengths
+        must match), or the sole iterable when ``arg_iter`` is omitted.
+
+        At most ``max_outstanding`` (default: the DFK's
+        ``map_backpressure``; ``None`` = unlimited) tasks from this map
+        are outstanding — submitted but unfinished — at once; further
         submissions block until earlier tasks finish, bounding executor
         queue depth for large sweeps.
         """
+        if arg_iter is None and kwargs_iter is None:
+            raise ValueError("map() needs arg_iter and/or kwargs_iter")
         cap = max_outstanding if max_outstanding is not None else self.map_backpressure
         if cap is not None and cap < 1:
             raise ValueError(f"max_outstanding must be >= 1, got {cap}")
         gate = threading.BoundedSemaphore(cap) if cap else None
+
+        def invocations():
+            if kwargs_iter is None:
+                for args in arg_iter:  # type: ignore[union-attr]
+                    yield args, {}
+            elif arg_iter is None:
+                for kwargs in kwargs_iter:
+                    yield _NO_ARGS, kwargs
+            else:
+                args_it, kw_it = iter(arg_iter), iter(kwargs_iter)
+                while True:
+                    a = next(args_it, _EXHAUSTED)
+                    k = next(kw_it, _EXHAUSTED)
+                    if a is _EXHAUSTED and k is _EXHAUSTED:
+                        return
+                    if a is _EXHAUSTED or k is _EXHAUSTED:
+                        raise ValueError(
+                            "map(): arg_iter and kwargs_iter lengths differ")
+                    yield a, k
+
         futures: list[AppFuture] = []
-        for args in arg_iter:
-            if not isinstance(args, tuple):
+        for args, kwargs in invocations():
+            if args is _NO_ARGS:
+                args = ()
+            elif unpack and isinstance(args, tuple):
+                pass                      # tuple-splat (historical default)
+            else:
                 args = (args,)
+            if not isinstance(kwargs, dict):
+                raise TypeError(
+                    f"kwargs_iter elements must be dicts, got {type(kwargs).__name__}")
             if gate is not None:
                 gate.acquire()
-                fut = self.submit(td, args, {})
+                fut = self.submit(td, args, dict(kwargs))
                 fut.add_done_callback(lambda _f, g=gate: g.release())
             else:
-                fut = self.submit(td, args, {})
+                fut = self.submit(td, args, dict(kwargs))
             futures.append(fut)
         return futures
 
@@ -311,14 +530,15 @@ class DataFlowKernel:
             return  # cancelled/resolved while queued for dispatch
         if rec.first_dispatch_time <= 0:
             rec.first_dispatch_time = time.time()
-        if self.sentinel is not None:
+        stack = rec.stack if rec.stack is not None else self.policies
+        if stack._dispatchers:
             t0 = time.perf_counter()
-            reason = self.sentinel.check_dispatch(rec)
+            reason = stack.on_dispatch(rec, self.context())
             self.stats["wrath_overhead_s"] += time.perf_counter() - t0
             if reason is not None:
                 self.fast_fail_task(rec.task_id, reason)
                 return
-        pool_name = rec.target_pool or self.default_pool
+        pool_name = rec.target_pool or rec.pool_default or self.default_pool
         ex = self.executors.get(pool_name)
         if ex is None:
             err = ResourceStarvationError(f"no executor for pool {pool_name!r}")
@@ -338,6 +558,8 @@ class DataFlowKernel:
             self.monitor.record_task_event(
                 rec.task_id, "scheduled", pool=pool_name, node=node.name,
                 attempt=rec.retry_count)
+        if rec.replicas > 0 and rec.retry_count == 0:
+            self._launch_replicas(rec, first_node=node.name)
 
     # ------------------------------------------------------------------ #
     # cancellation / preemption / drain (the proactive action surface)
@@ -389,6 +611,11 @@ class DataFlowKernel:
             self.monitor.record_task_event(task_id, "cancelled", reason=reason)
         self._cancel_race_loser(rec, task_id)
         self._finish(rec, error=err)
+        if not isinstance(err, TaskCancelledError):
+            # a fast-fail (real error, not a plain cancel) is a genuine
+            # terminal failure — let the owning scope propagate it; plain
+            # cancellations must not re-trigger propagation storms
+            self._propagate_workflow_failure(rec)
         return True
 
     def preempt_task(self, task_id: str, *, reason: str = "") -> bool:
@@ -410,7 +637,16 @@ class DataFlowKernel:
         ex = self.executors.get(pool_name or self.default_pool)
         if ex is None:
             return False
-        if ex.cancel_queued(task_id, node_name):
+        removed = ex.cancel_queued(task_id, node_name)
+        if removed is not None and removed.is_speculative:
+            # copies share the original's task id: we dequeued a racing
+            # COPY, not the original (which is still running).  Retire the
+            # copy's live-attempt slot — re-dispatching the running
+            # original here would double-execute it.
+            removed.cancel_requested = True
+            self._copy_attempt_failed(removed)
+            removed = None
+        if removed is not None:
             # real cancellation: steer the re-dispatch away from the node
             candidates = [n for n in ex.eligible_nodes(rec)
                           if n.name != node_name]
@@ -463,13 +699,19 @@ class DataFlowKernel:
             self.monitor.record_system_event("node_undrain", node=node_name)
 
     def _launch_copy(self, rec: TaskRecord, *,
-                     avoid_node: str | None) -> TaskRecord | None:
-        """Start a backup copy of ``rec`` on a different node.
+                     avoid_node: str | set[str] | None) -> TaskRecord | None:
+        """Start a racing copy of ``rec`` on a different node.
 
-        Shared by straggler speculation and preemptive migration: the copy
-        shares the original's future and task id; whichever attempt
-        finishes first wins (``_done_first``), and the loser is cancelled.
+        Shared by straggler speculation, preemptive migration and
+        ``replicate(n)``: the copy shares the original's future and task
+        id; whichever attempt finishes first wins (``_done_first``), and
+        every losing attempt is cancelled.  ``avoid_node`` (a name or a
+        set of names) steers placement; when every eligible node is
+        avoided the copy degrades gracefully to any eligible node rather
+        than not launching.
         """
+        avoid = ({avoid_node} if isinstance(avoid_node, str)
+                 else (avoid_node or set()))
         pool_name, _ = self._assignment.get(rec.task_id,
                                             (self.default_pool, None))
         ex = self.executors.get(pool_name or self.default_pool)
@@ -481,34 +723,73 @@ class DataFlowKernel:
             max_retries=0, future=rec.future)
         copy.is_speculative = True
         candidates = [c for c in ex.eligible_nodes(copy)
-                      if c.name != avoid_node]
+                      if c.name not in avoid]
         target = self.scheduler.select(copy, candidates, pool=ex.pool)
         if target is not None:
             copy.target_node = target.name
         placed = ex.submit(copy)
+        if placed is None:
+            # no eligible node: the copy never queued, never runs, and must
+            # not count as a live attempt the terminal path could wait on
+            return None
         with self._lock:
-            self._spec_copies[rec.task_id] = (
-                copy, placed.name if placed is not None else None)
+            self._spec_copies.setdefault(rec.task_id, []).append(
+                (copy, placed.name))
+            self._live_copies[rec.task_id] = (
+                self._live_copies.get(rec.task_id, 0) + 1)
         return copy
 
-    def _cancel_race_loser(self, winner: TaskRecord, task_id: str) -> None:
-        """When one attempt resolves the task, cancel the other attempt."""
+    def _launch_replicas(self, rec: TaskRecord, *, first_node: str) -> None:
+        """Launch the racing copies requested by ``replicate(n)``.
+
+        Runs once per task, right after the original's first placement;
+        each copy steers away from the original's node *and* the nodes
+        earlier copies landed on, so replication buys real placement
+        diversity (degrading to reuse only when the pool is smaller than
+        the replica count).  Replicated tasks join ``_speculated`` so the
+        straggler watcher and the preemption path don't stack yet more
+        copies on top of the race.
+        """
         with self._lock:
-            pair = self._spec_copies.pop(task_id, None)
-            if pair is None:
+            if rec.task_id in self._replicated:
                 return
-            copy, copy_node = pair
+            if self._done_first.get(rec.task_id):
+                # a sub-millisecond original already resolved the task (and
+                # its loser-cancellation pass already ran): copies launched
+                # now could never be cancelled and would execute for nothing
+                return
+            self._replicated.add(rec.task_id)
+            self._speculated.add(rec.task_id)
+        used: set[str] = {first_node}
+        for _ in range(rec.replicas):
+            copy = self._launch_copy(rec, avoid_node=used)
+            if copy is None:
+                break
+            if copy.target_node:
+                used.add(copy.target_node)
+            self.stats["replicas"] += 1
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                rec.task_id, "replicated", copies=rec.replicas,
+                original_node=first_node)
+
+    def _cancel_race_loser(self, winner: TaskRecord, task_id: str) -> None:
+        """When one attempt resolves the task, cancel every other attempt."""
+        with self._lock:
+            copies = self._spec_copies.pop(task_id, None)
+            if copies is None:
+                return
             pool_name, orig_node = self._assignment.get(task_id, (None, None))
             original = self.tasks.get(task_id)
-        loser, loser_node = ((copy, copy_node) if winner is not copy
-                             else (original, orig_node))
-        if loser is None or loser is winner:
-            return
-        loser.cancel_requested = True
-        loser.cancel_reason = "lost the speculative race"
+        losers = [(c, n) for c, n in copies if c is not winner]
+        if original is not None and original is not winner:
+            losers.append((original, orig_node))
         ex = self.executors.get(pool_name or self.default_pool)
-        if ex is not None and loser_node:
-            ex.cancel_queued(task_id, loser_node)  # never runs if still queued
+        for loser, loser_node in losers:
+            loser.cancel_requested = True
+            loser.cancel_reason = "lost the speculative race"
+            if ex is not None and loser_node:
+                ex.cancel_queued(task_id, loser_node)  # never runs if still queued
 
     # ------------------------------------------------------------------ #
     # results & failure routing
@@ -524,6 +805,18 @@ class DataFlowKernel:
         if wnode is not None:
             node = wnode.name
             pool = wnode.pool.name if wnode.pool is not None else pool
+        if err is None and not rec.cancel_requested:
+            # result validation (e.g. replicate(validate=)): an invalid
+            # result — from the original or any racing copy — is discarded
+            # and converted into a failure of this attempt
+            primary = self.tasks.get(rec.task_id, rec)
+            stack = primary.stack if primary.stack is not None else self.policies
+            if stack._validators:
+                t0 = time.perf_counter()
+                vexc = stack.on_result(primary, result, self.context())
+                self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+                if vexc is not None:
+                    err = vexc
         duration = rec.end_time - rec.start_time
         rec.record_attempt(node=node or "?", pool=pool or "?",
                            worker=getattr(worker, "worker_id", "?"),
@@ -544,15 +837,24 @@ class DataFlowKernel:
             if err is None:
                 self._done_first[rec.task_id] = True
                 rec.state = TaskState.COMPLETED
+                # a winning copy must also complete the *original* record —
+                # it is the one registered in workflow scopes and stats
+                primary = self.tasks.get(rec.task_id)
+                if primary is not None and primary is not rec:
+                    primary.state = TaskState.COMPLETED
                 if rec.retry_count > 0:
                     self.stats["retry_success"] += 1
                 self.stats["completed"] += 1
         if err is None:
+            self._pending_terminal.pop(rec.task_id, None)
             self._cancel_race_loser(rec, rec.task_id)
             self._finish(rec, result=result)
         else:
             if rec.is_speculative:
-                return  # backup copy failed; the original is still in flight
+                # a racing copy failed; the original (or a stashed terminal
+                # error awaiting the last copy) decides the task's fate
+                self._copy_attempt_failed(rec)
+                return
             report = self._make_report(rec, err, node=node, pool=pool,
                                        worker=getattr(worker, "worker_id", None))
             self._route_failure(rec, report, err)
@@ -581,18 +883,12 @@ class DataFlowKernel:
 
     def _route_failure(self, rec: TaskRecord, report: FailureReport,
                        err: BaseException) -> None:
+        stack = rec.stack if rec.stack is not None else self.policies
         t0 = time.perf_counter()
-        try:
-            decision = self.retry_handler(rec, report, self.context())
-        except Exception as handler_err:  # noqa: BLE001 - handler bug = fail task
-            decision = RetryDecision(Action.FAIL,
-                                     reason=f"retry handler error: {handler_err!r}")
-        # proactive second opinion: veto retries destined to fail
-        if self.sentinel is not None and decision.action is not Action.FAIL:
-            try:
-                decision = self.sentinel.review_retry(rec, report, decision)
-            except Exception as sentinel_err:  # noqa: BLE001 - sentinel bug = keep decision
-                self._on_event_error("proactive-review", sentinel_err)
+        # the full middleware protocol: first decisive on_failure wins
+        # (baseline retry as terminal fallback), then every policy's
+        # review_decision pass (e.g. the proactive retry veto)
+        decision = stack.decide(rec, report, self.context())
         self.stats["wrath_overhead_s"] += time.perf_counter() - t0
 
         # engine invariant: a child whose parent terminally failed can never
@@ -602,6 +898,13 @@ class DataFlowKernel:
             decision = RetryDecision(
                 Action.FAIL, reason=f"dependency failure is terminal "
                                     f"(handler said {decision.action.value})")
+
+        # a retry scheduled on a stopped event loop would never fire and
+        # the future would hang: post-shutdown failures are terminal
+        if self._shutting_down and decision.action is not Action.FAIL:
+            decision = RetryDecision(
+                Action.FAIL, reason="DataFlowKernel is shutting down: "
+                                    "no further retries will run")
 
         if self.monitor is not None:
             self.monitor.record_task_event(
@@ -653,15 +956,59 @@ class DataFlowKernel:
                 self.events.call_soon(self._dispatch, rec, name="retry-dispatch")
             return
 
-        # terminal failure
+        # terminal failure — but racing copies may still save the task: a
+        # healthy replica's result wins over the original's error (HPX
+        # replicate semantics), so defer while any copy is in flight.
+        # During shutdown queued copies die with the executors, so a stash
+        # made after shutdown's flush would never resolve — fail directly.
+        with self._lock:
+            if (not self._shutting_down
+                    and self._live_copies.get(rec.task_id, 0) > 0
+                    and not self._done_first.get(rec.task_id)):
+                self._pending_terminal[rec.task_id] = err
+                return
+        self._fail_terminally(rec, err)
+
+    def _fail_terminally(self, rec: TaskRecord, err: BaseException) -> None:
         is_dep = isinstance(err, DependencyError)
         with self._lock:
+            if self._done_first.get(rec.task_id):
+                return
             self._done_first[rec.task_id] = True
             rec.state = TaskState.DEP_FAILED if is_dep else TaskState.FAILED
             rec.exception = err
             rec.terminal_time = time.time()
             self.stats["dep_failed" if is_dep else "failed"] += 1
         self._finish(rec, error=err)
+        if not is_dep:
+            # hierarchical failure propagation: the task's innermost
+            # workflow scope decides whether siblings/ancestors fast-fail.
+            # DEP_FAILED children are excluded — their root cause already
+            # propagated when the parent task terminally failed.
+            self._propagate_workflow_failure(rec)
+
+    def _copy_attempt_failed(self, copy: TaskRecord) -> None:
+        """A racing copy failed: if the original already failed terminally
+        and this was the last copy in flight, resolve the task now."""
+        task_id = copy.task_id
+        with self._lock:
+            left = max(self._live_copies.get(task_id, 1) - 1, 0)
+            self._live_copies[task_id] = left
+            if left > 0 or self._done_first.get(task_id):
+                return
+            err = self._pending_terminal.pop(task_id, None)
+        if err is not None:
+            primary = self.tasks.get(task_id)
+            if primary is not None:
+                self._fail_terminally(primary, err)
+
+    def _propagate_workflow_failure(self, rec: TaskRecord) -> None:
+        if self._shutting_down or rec.workflow is None:
+            return
+        try:
+            rec.workflow.on_member_failed(rec)
+        except Exception as err:  # noqa: BLE001 - propagation bug must not kill routing
+            self._on_event_error("workflow-propagate", err)
 
     def _finish(self, rec: TaskRecord, *, result: Any = None,
                 error: BaseException | None = None) -> None:
@@ -740,10 +1087,22 @@ class DataFlowKernel:
                 return est
         return rec.resources.est_duration_s
 
-    def _check_stragglers(self) -> None:
+    def check_stragglers(self, *, factor: float | None = None,
+                         scope: Any = None) -> None:
+        """One straggler sweep: speculate on tasks running far beyond their
+        expected duration.  Driven by :class:`~repro.engine.policies.
+        StragglerPolicy` on the periodic policy tick; ``scope`` (a
+        :class:`~repro.engine.workflow.Workflow`) restricts the watch to
+        that scope's subtree."""
+        factor = self.straggler_factor if factor is None else factor
+        scope_ids: set[str] | None = None
+        if scope is not None:
+            scope_ids = {r.task_id for r in scope.tasks()}
         now = time.time()
         for tid, rec in list(self.tasks.items()):
             if self._done_first.get(tid) or tid in self._speculated:
+                continue
+            if scope_ids is not None and tid not in scope_ids:
                 continue
             # only tasks a worker actually picked up accrue runtime — the
             # RUNNING transition is set by the worker on pickup
@@ -752,7 +1111,7 @@ class DataFlowKernel:
             est = self._straggler_estimate(rec)
             if est <= 0:
                 continue
-            if now - rec.start_time > self.straggler_factor * est:
+            if now - rec.start_time > factor * est:
                 self._speculated.add(tid)
                 self.stats["speculations"] += 1
                 _, node = self._assignment.get(tid, (self.default_pool, None))

@@ -98,17 +98,19 @@ class Executor:
         node.task_queue.put(record)
         return node
 
-    def cancel_queued(self, task_id: str, node_name: str) -> bool:
+    def cancel_queued(self, task_id: str, node_name: str) -> TaskRecord | None:
         """Real cancellation: pull a still-queued task off its node.
 
-        Returns True if the record was removed before any worker picked it
-        up; False means the task is already running (or finished) and the
-        caller must use the migration/ignore path instead.
+        Returns the removed record (truthy) if one was dequeued before any
+        worker picked it up — callers inspect ``is_speculative`` to tell a
+        racing copy from the original; ``None`` means nothing matching is
+        queued (already running or finished) and the caller must use the
+        migration/ignore path instead.
         """
         mgr = self.managers.get(node_name)
         if mgr is None:
-            return False
-        return mgr.cancel(task_id) is not None
+            return None
+        return mgr.cancel(task_id)
 
     # -- component restart (WRATH policy action) --------------------------
     def restart_workers(self, node_name: str) -> int:

@@ -114,6 +114,19 @@ class TaskRecord:
     # backup copy launched by straggler speculation / preemptive migration;
     # its result is only used if it finishes before the original
     is_speculative: bool = False
+    # --- hierarchy & policy plumbing (set by the DFK at submit) ---------
+    # owning Workflow scope (None = engine root scope)
+    workflow: Any = field(default=None, repr=False)
+    # resolved per-invocation PolicyStack (task > workflow chain > engine)
+    stack: Any = field(default=None, repr=False)
+    # fallback pool when neither the task nor a retry decision pinned one
+    # (the enclosing workflow's pool default)
+    pool_default: str | None = None
+    # racing copies requested by replicate(n) (launched after placement)
+    replicas: int = 0
+    # engine callback fired by the worker on the RUNNING transition (only
+    # set when some policy in the stack overrides on_running)
+    on_running: Any = field(default=None, repr=False)
     lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def effective_resources(self) -> ResourceSpec:
@@ -141,17 +154,32 @@ class TaskRecord:
 
 @dataclass(frozen=True)
 class TaskDef:
-    """A task template produced by the :func:`task` decorator."""
+    """A task template produced by the :func:`task` decorator.
+
+    Per-invocation placement and resilience are settable via
+    :meth:`options`: ``pool=`` pins the target resource pool,
+    ``workflow=`` routes the invocation into a specific
+    :class:`~repro.engine.workflow.Workflow` scope (instead of the
+    thread's active scope), and ``policy=`` pushes per-call resilience
+    middleware (a :class:`~repro.engine.policies.ResiliencePolicy`, a
+    list of them, or a bare retry-handler callable) that resolves ahead
+    of the workflow's and the engine's stacks.
+    """
 
     fn: Callable[..., Any]
     name: str
     resources: ResourceSpec
     max_retries: int | None
+    pool: str | None = None
+    workflow: Any = None
+    policy: Any = None
 
     def __call__(self, *args: Any, **kwargs: Any) -> AppFuture:
         from repro.engine.dfk import DataFlowKernel
 
         dfk = DataFlowKernel.current()
+        if dfk is None and self.workflow is not None:
+            dfk = self.workflow.dfk
         if dfk is None:
             raise RuntimeError(
                 f"task {self.name!r} invoked outside a DataFlowKernel session; "
@@ -160,16 +188,35 @@ class TaskDef:
         return dfk.submit(self, args, kwargs)
 
     def options(self, **overrides: Any) -> "TaskDef":
-        """Return a copy with modified resources / retry settings."""
+        """Return a copy with modified resources / retry / placement /
+        resilience settings (``pool=``, ``workflow=``, ``policy=``).
+
+        For sweeps, build the policied TaskDef **once** and reuse it
+        (``fd = f.options(policy=replay(3)); [fd(x) for x in xs]``): the
+        engine caches one resolved stack per distinct policy object and
+        registers each with the engine for its lifetime — constructing a
+        fresh policy inside the loop grows that registry per call (the
+        same lifetime the engine already gives task records).
+        """
         res = dict(self.resources.asdict())
         max_retries = overrides.pop("max_retries", self.max_retries)
+        pool = overrides.pop("pool", self.pool)
+        workflow = overrides.pop("workflow", self.workflow)
+        policy = overrides.pop("policy", self.policy)
+        if policy is not None:
+            # normalize once here, not per submission: a bare callable is
+            # wrapped in a stable RetryHandlerPolicy so the engine's
+            # resolved-stack cache hits for every invocation of this def
+            from repro.engine.policies import normalize_policies
+            policy = normalize_policies(policy)
         for k in list(overrides):
             if k in res:
                 res[k] = overrides.pop(k)
         if overrides:
             raise TypeError(f"unknown task options: {sorted(overrides)}")
         res["packages"] = tuple(res["packages"])
-        return TaskDef(self.fn, self.name, ResourceSpec(**res), max_retries)
+        return TaskDef(self.fn, self.name, ResourceSpec(**res), max_retries,
+                       pool=pool, workflow=workflow, policy=policy)
 
 
 def task(

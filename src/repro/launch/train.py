@@ -16,6 +16,7 @@ import argparse
 import json
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.engine.policies import WrathPolicy, replay
 from repro.engine.scheduler import SCHEDULERS, make_scheduler
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor
@@ -50,6 +51,10 @@ def main() -> None:
     ap.add_argument("--scheduler", default=None, choices=sorted(SCHEDULERS),
                     help="placement policy for shard->host assignment and "
                          "speculation targets (default: legacy fixed order)")
+    ap.add_argument("--replay", type=int, default=0,
+                    help="prepend an HPX-style replay(N) policy: every "
+                         "shard gets N attempts before WRATH's taxonomy "
+                         "is even consulted (0 = WRATH stack only)")
     ap.add_argument("--json", action="store_true", help="machine-readable report")
     args = ap.parse_args()
 
@@ -62,11 +67,16 @@ def main() -> None:
     if overrides:
         cfg = cfg.scaled(**overrides)
 
+    # the training plane runs on the same composable policy stack as the
+    # task plane: first decisive decision wins, WRATH is the terminal expert
+    policy = ([replay(args.replay, on_exhausted="defer")]
+              if args.replay else []) + [WrathPolicy()]
     sup = WrathTrainSupervisor(
         cfg, OptConfig(lr=args.lr, warmup_steps=max(args.steps // 20, 1),
                        total_steps=args.steps),
         n_hosts=args.hosts, global_batch=args.global_batch, seq_len=args.seq,
         ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every,
+        policy=policy,
         scheduler=make_scheduler(args.scheduler) if args.scheduler else None)
     events = [parse_event(e) for e in args.inject]
     rep = sup.run(args.steps, events=events)

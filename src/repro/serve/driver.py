@@ -17,6 +17,20 @@ one, and a least-loaded or history-aware scheduler can be dropped in
 unchanged.  Per-batch placements (and decode wall time) are recorded in
 the monitoring database, so the history-aware scheduler learns fast
 replicas over time.
+
+Failover decisions flow through the same composable
+:class:`~repro.engine.policies.PolicyStack` as the task plane
+(``WrathServeDriver(policy=...)``, default a single
+:class:`~repro.engine.policies.WrathPolicy`): the first decisive
+:class:`~repro.engine.retry_api.RetryDecision` wins, so e.g.
+``policy=[replay(5), WrathPolicy()]`` gives every batch five replica
+attempts regardless of the taxonomy's verdict.
+
+The serving loop drives the *decision* subset of the policy protocol —
+``on_submit``, ``on_failure``, ``review_decision``.  Engine-execution
+policies (``replicate``'s racing copies, ``StragglerPolicy``'s periodic
+sweep) need the DataFlowKernel's copy/tick machinery and are inert here;
+use them on the task plane.
 """
 from __future__ import annotations
 
@@ -28,8 +42,8 @@ import numpy as np
 
 from repro.core import MonitoringDatabase
 from repro.core.failures import FailureReport, HardwareShutdownError
-from repro.core.policy import ResiliencePolicyEngine
 from repro.engine.cluster import Cluster, Node, ResourcePool
+from repro.engine.policies import PolicyStack, WrathPolicy, normalize_policies
 from repro.engine.retry_api import Action, SchedulingContext
 from repro.engine.scheduler import RoundRobinScheduler, Scheduler
 from repro.engine.task import ResourceSpec, TaskDef, new_task_record
@@ -66,6 +80,7 @@ class WrathServeDriver:
     def __init__(self, cfg: ModelConfig, *, n_replicas: int = 3,
                  max_batch: int = 4, seed: int = 0,
                  scheduler: Scheduler | None = None,
+                 policy: object = None,
                  health_gate: bool = True):
         self.cfg = cfg
         self.max_batch = max_batch
@@ -74,12 +89,23 @@ class WrathServeDriver:
                  for i in range(n_replicas)]
         self.cluster = Cluster([ResourcePool("serve", nodes)])
         self.monitor = MonitoringDatabase()
-        self.policy = ResiliencePolicyEngine()
+        # policy=None -> WRATH default; an explicit empty stack ([]) is a
+        # valid choice meaning Parsl-style baseline retry only
+        self.policies = PolicyStack(
+            normalize_policies(policy) if policy is not None
+            else (WrathPolicy(),),
+            on_error=self._policy_error)
         self.scheduler = (scheduler or RoundRobinScheduler()).bind(
             cluster=self.cluster, monitor=self.monitor)
         self.denylist: set[str] = set()
         self.params = materialize(param_defs(cfg), jax.random.PRNGKey(seed))
         self._decode = jax.jit(lambda p, c, b: decode_step(p, c, b, cfg))
+
+    def _policy_error(self, hook: str, err: BaseException) -> None:
+        """Swallowed policy-hook exceptions stay visible as system events."""
+        self.monitor.record_system_event(
+            "policy_error", event=hook, error=type(err).__name__,
+            message=str(err))
 
     def _ctx(self) -> SchedulingContext:
         return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
@@ -157,6 +183,9 @@ class WrathServeDriver:
             rec = new_task_record(
                 TaskDef(lambda: None, "decode_batch", ResourceSpec(), 2),
                 (), {}, default_retries=2)
+            # full middleware protocol: on_submit lets policies set up
+            # per-record state (e.g. deferred replay's budget extension)
+            self.policies.on_submit(rec, self._ctx())
             replica = self._pick_replica(rec)
             if replica is None:
                 failed += b
@@ -190,7 +219,7 @@ class WrathServeDriver:
                     report = FailureReport.from_exception(
                         err, task_id=rec.task_id, node=replica.name,
                         pool="serve")
-                    decision = self.policy(rec, report, self._ctx())
+                    decision = self.policies.decide(rec, report, self._ctx())
                     recoveries.append({
                         "replica": replica.name, "step": t,
                         "action": decision.action.value,

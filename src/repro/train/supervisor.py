@@ -5,8 +5,11 @@ Training is executed as a task hierarchy: each step fans out per-host
 *gradient-shard tasks* over a set of virtual hosts (an
 ``repro.engine.cluster.Cluster`` pool, so heterogeneous memory/health/speed
 and the WRATH machinery come for free).  Failures raised while computing a
-shard flow through the SAME :class:`ResiliencePolicyEngine` as the task
-plane:
+shard flow through the SAME composable :class:`~repro.engine.policies.
+PolicyStack` as the task plane (``policy=`` kwarg, WRATH by default; like
+the serving plane, the supervisor drives the *decision* subset of the
+protocol — ``on_submit``/``on_failure``/``review_decision`` — while
+engine-execution policies such as ``replicate`` are task-plane only):
 
 * host loss (``HardwareShutdownError``)  → denylist + hierarchical retry
   of the lost shard on another host; subsequent steps re-mesh elastically
@@ -38,9 +41,9 @@ from repro.core.failures import (
     HardwareShutdownError,
     NumericalDivergenceError,
 )
-from repro.core.policy import ResiliencePolicyEngine
 from repro.data import batch_for
 from repro.engine.cluster import Cluster, Node, ResourcePool
+from repro.engine.policies import PolicyStack, WrathPolicy, normalize_policies
 from repro.engine.retry_api import Action, SchedulingContext
 from repro.engine.scheduler import Scheduler
 from repro.engine.task import ResourceSpec, TaskDef, new_task_record
@@ -91,6 +94,7 @@ class WrathTrainSupervisor:
         data_seed: int = 0,
         straggler_factor: float = 3.0,
         scheduler: Scheduler | None = None,
+        policy: object = None,
         profile_shard_sizing: bool = True,
     ):
         self.cfg = cfg
@@ -109,7 +113,14 @@ class WrathTrainSupervisor:
                               workers_per_node=1))
         self.cluster = Cluster([ResourcePool("pod0", nodes)])
         self.monitor = MonitoringDatabase()
-        self.policy = ResiliencePolicyEngine()
+        # composable resilience stack (task-hierarchy API): shard-failure
+        # decisions flow through the same middleware protocol as the task
+        # plane — first decisive decision wins.  policy=None -> WRATH
+        # default; an explicit [] means Parsl-style baseline retry only
+        self.policies = PolicyStack(
+            normalize_policies(policy) if policy is not None
+            else (WrathPolicy(),),
+            on_error=self._policy_error)
         # optional placement policy: when set, shard->host assignment and
         # speculation targets go through the scheduler interface (None
         # keeps the legacy fixed-order assignment + EMA-fastest targets)
@@ -127,6 +138,12 @@ class WrathTrainSupervisor:
         self._slow_counts: dict[str, int] = {}
 
     # ------------------------------------------------------------------ #
+    def _policy_error(self, hook: str, err: BaseException) -> None:
+        """Swallowed policy-hook exceptions stay visible as system events."""
+        self.monitor.record_system_event(
+            "policy_error", event=hook, error=type(err).__name__,
+            message=str(err))
+
     def _ctx(self) -> SchedulingContext:
         return SchedulingContext(cluster=self.cluster, monitor=self.monitor,
                                  denylist=self.denylist, default_pool="pod0",
@@ -292,6 +309,9 @@ class WrathTrainSupervisor:
                     TaskDef(lambda: None, "grad_shard",
                             ResourceSpec(memory_gb=self.shard_memory_gb), 2),
                     (), {}, default_retries=2)
+                # full middleware protocol: on_submit lets policies set up
+                # per-record state (e.g. deferred replay's budget extension)
+                self.policies.on_submit(rec, self._ctx())
                 while attempt_host is not None:
                     t0 = time.perf_counter()
                     try:
@@ -352,7 +372,7 @@ class WrathTrainSupervisor:
                             retry_count=rec.retry_count)
                         self.monitor.record_task_placement(
                             "grad_shard", attempt_host.name, "pod0", ok=False)
-                        decision = self.policy(rec, report, self._ctx())
+                        decision = self.policies.decide(rec, report, self._ctx())
                         recoveries.append({
                             "step": step, "error": type(err).__name__,
                             "host": attempt_host.name,
@@ -366,9 +386,17 @@ class WrathTrainSupervisor:
                         if decision.action in (Action.RETRY,
                                                Action.RESTART_AND_RETRY):
                             rec.retry_count += 1
-                            attempt_host = (self.cluster.find_node(
-                                decision.target_node)
-                                if decision.target_node else None)
+                            if decision.target_node:
+                                attempt_host = self.cluster.find_node(
+                                    decision.target_node)
+                            else:
+                                # un-pinned retry (e.g. replay(n)): move to
+                                # another healthy host when one exists
+                                failed = attempt_host.name
+                                others = [h for h in self.healthy_hosts()
+                                          if h.name != failed]
+                                attempt_host = (others[0] if others else
+                                                (self.healthy_hosts() or [None])[0])
                         else:
                             attempt_host = None
                 if restart_step:

@@ -1,0 +1,439 @@
+"""Task-hierarchy API: Workflow scopes, policy stacks, combinators, shims."""
+import time
+import warnings
+
+import pytest
+
+from repro.api import (
+    Cluster,
+    DataFlowKernel,
+    MonitoringDatabase,
+    PolicyStack,
+    ProactivePolicy,
+    ResiliencePolicy,
+    RetryDecision,
+    Action,
+    TaskCancelledError,
+    WrathPolicy,
+    replay,
+    replicate,
+    task,
+)
+from repro.core import wrath_retry_handler
+
+
+@task(memory_gb=1)
+def add_one(x):
+    return x + 1
+
+
+@task(memory_gb=200)          # too big for 192 GB small-mem nodes
+def hungry(x):
+    return x * 2
+
+
+@task
+def napper(x, duration=1.0):
+    time.sleep(duration)
+    return x
+
+
+@task(max_retries=0)
+def fatal():
+    raise ValueError("fatal task error")
+
+
+# --------------------------------------------------------------------- #
+# deprecation shims: old kwargs == equivalent policy stacks
+# --------------------------------------------------------------------- #
+def _oom_recovery_decisions(**dfk_kwargs):
+    """Run the §VII-C OOM-recovery golden path; return (result, decisions)."""
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    with DataFlowKernel(cluster, monitor=MonitoringDatabase(),
+                        default_pool="small-mem", default_retries=2,
+                        **dfk_kwargs) as dfk:
+        result = hungry(21).result(timeout=30)
+    return result, dfk
+
+
+def test_legacy_retry_handler_kwarg_warns_and_matches_policy_stack():
+    handler = wrath_retry_handler()
+    with pytest.warns(DeprecationWarning, match="retry_handler"):
+        old_result, _ = _oom_recovery_decisions(retry_handler=handler)
+    wrath = WrathPolicy()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error", DeprecationWarning)  # new path is clean
+        new_result, _ = _oom_recovery_decisions(policy=[wrath])
+    assert old_result == new_result == 42
+    old = [(d["failure_type"], d["action"], d["rung"]) for d in handler.decisions]
+    new = [(d["failure_type"], d["action"], d["rung"]) for d in wrath.decisions]
+    assert old == new          # identical decision sequence, both spellings
+    assert ("resource_starvation", "retry", 4) in new
+
+
+def test_legacy_proactive_kwarg_matches_proactive_policy():
+    """Predictive fast-fail fires identically through both spellings."""
+    def run(**kwargs):
+        cluster = Cluster.homogeneous(2, memory_gb=8)
+        with DataFlowKernel(cluster, monitor=MonitoringDatabase(),
+                            **kwargs) as dfk:
+            fut = hungry(1)    # 200 GB fits no 8 GB node: destined to fail
+            with pytest.raises(Exception):
+                fut.result(timeout=10)
+            kinds = [d.kind for d in dfk.sentinel.decisions]
+            return kinds, dfk.stats["fast_fails"], len(fut.record.attempts)
+
+    with pytest.warns(DeprecationWarning, match="proactive"):
+        old_kinds, old_ff, old_attempts = run(
+            retry_handler=wrath_retry_handler(), proactive=True)
+    new_kinds, new_ff, new_attempts = run(
+        policy=[WrathPolicy(), ProactivePolicy()])
+    assert "fast_fail" in old_kinds and "fast_fail" in new_kinds
+    assert old_ff == new_ff == 1
+    assert old_attempts == new_attempts == 0   # failed before any execution
+
+
+def test_legacy_speculative_execution_kwarg_warns():
+    with pytest.warns(DeprecationWarning, match="speculative_execution"):
+        dfk = DataFlowKernel(Cluster.homogeneous(2),
+                             speculative_execution=True)
+    from repro.engine.policies import StragglerPolicy
+    assert any(isinstance(p, StragglerPolicy) for p in dfk.policies)
+
+
+# --------------------------------------------------------------------- #
+# workflow scopes
+# --------------------------------------------------------------------- #
+def test_workflow_scope_defaults_and_nesting():
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    with DataFlowKernel(cluster, default_pool="small-mem") as dfk:
+        with dfk.workflow("outer", pool="big-mem", retries=7) as outer:
+            with outer.workflow("inner") as inner:
+                fut = add_one(1)
+        assert fut.result(timeout=10) == 2
+        rec = fut.record
+        assert rec.workflow is inner
+        assert inner.parent is outer
+        assert inner.path == "outer/inner"
+        assert rec.pool_default == "big-mem"      # inherited from outer
+        assert rec.max_retries == 7               # inherited scope default
+        pool, node = dfk._assignment[rec.task_id]
+        assert pool == "big-mem"
+        assert outer.stats()["tasks"] == 1        # subtree includes inner's
+
+
+def test_workflow_options_pin_beats_active_scope():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        target = dfk.workflow("target")
+        with dfk.workflow("active"):
+            fut = add_one.options(workflow=target)(5)
+        assert fut.result(timeout=10) == 6
+        assert fut.record.workflow is target
+        assert target.stats()["tasks"] == 1
+
+
+def test_nested_cancel_kills_descendants_not_siblings_propagate_none():
+    """Satellite acceptance: with propagate="none", cancelling a sub-scope
+    kills its queued + running descendants while sibling scopes finish."""
+    with DataFlowKernel(Cluster.homogeneous(1, workers_per_node=2)) as dfk:
+        with dfk.workflow("root") as root:
+            with root.workflow("victim", propagate="none") as victim:
+                # 2 workers: first two run, the rest queue behind them
+                running = [napper(i, duration=3.0) for i in range(2)]
+                queued = [napper(i, duration=0.1) for i in range(4)]
+            with root.workflow("sibling") as sibling:
+                safe = [napper(i, duration=0.1) for i in range(2)]
+        time.sleep(0.3)        # let the first nappers reach RUNNING
+        n = victim.cancel("test cancel")
+        assert n == len(running) + len(queued)
+        for f in running + queued:
+            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+        # sibling scope is untouched and completes
+        assert [f.result(timeout=20) for f in safe] == [0, 1]
+        assert victim.cancelled and not sibling.cancelled
+        assert sibling.stats()["completed"] == 2
+
+
+def test_propagate_siblings_fast_fails_scope_subtree():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        with dfk.workflow("root") as root:
+            with root.workflow("doomed", propagate="siblings") as doomed:
+                sibs = [napper(i, duration=3.0) for i in range(3)]
+                bad = fatal()
+            safe = napper(99, duration=0.1)
+        with pytest.raises(ValueError):
+            bad.result(timeout=10)
+        # terminal failure of `bad` fast-fails its siblings...
+        for f in sibs:
+            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+        assert doomed.cancelled
+        # ...but not the parent scope's other members
+        assert safe.result(timeout=20) == 99
+        assert not root.cancelled
+
+
+def test_propagate_ancestors_fast_fails_whole_tree():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        with dfk.workflow("root") as root:
+            other = [napper(i, duration=3.0) for i in range(2)]
+            with root.workflow("stage", propagate="ancestors") as stage:
+                bad = fatal()
+        with pytest.raises(ValueError):
+            bad.result(timeout=10)
+        for f in other:        # the whole ancestor tree is cancelled
+            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+        assert root.cancelled and stage.cancelled
+
+
+def test_submission_into_cancelled_scope_is_cancelled():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        wf = dfk.workflow("dead")
+        wf.cancel("pre-cancelled")
+        fut = add_one.options(workflow=wf)(1)
+        assert isinstance(fut.exception(timeout=5), TaskCancelledError)
+
+
+def test_workflow_scoped_policy_beats_engine_stack():
+    """Per-invocation stack resolution: task > workflow > engine."""
+    class AlwaysFail(ResiliencePolicy):
+        def on_failure(self, rec, report, ctx):
+            return RetryDecision(Action.FAIL, reason="scope says fail fast")
+
+    with DataFlowKernel(Cluster.homogeneous(2), policy=[WrathPolicy()],
+                        default_retries=5) as dfk:
+        with dfk.workflow("strict", policy=AlwaysFail()):
+            fut = fatal.options(max_retries=5)()
+        with pytest.raises(ValueError):
+            fut.result(timeout=10)
+        assert len(fut.record.attempts) == 1   # scope policy pre-empted retries
+
+
+# --------------------------------------------------------------------- #
+# HPX-style combinators
+# --------------------------------------------------------------------- #
+def test_replay_runs_exactly_n_attempts():
+    with DataFlowKernel(Cluster.homogeneous(2), default_retries=9) as dfk:
+        fut = fatal.options(max_retries=9, policy=replay(3))()
+        with pytest.raises(ValueError):
+            fut.result(timeout=10)
+        assert len(fut.record.attempts) == 3
+
+
+def test_replay_defer_hands_over_to_deeper_policy():
+    """Deferred replay must not eat the deeper policy's retry budget:
+    with the engine-default budget (2), two replays then WRATH rung 4."""
+    wrath = WrathPolicy()
+    cluster = Cluster.paper_testbed(small_nodes=2, big_nodes=1)
+    with DataFlowKernel(cluster, policy=[wrath],
+                        default_pool="small-mem", default_retries=2) as dfk:
+        # 2 in-place replays OOM again; then WRATH's rung 4 finds big-mem
+        fut = hungry.options(policy=replay(2, on_exhausted="defer"))(21)
+        assert fut.result(timeout=30) == 42
+        assert len(wrath.decisions) >= 1       # WRATH took over post-replay
+        assert fut.record.retry_count >= 2
+
+
+def test_policy_class_instead_of_instance_raises():
+    with pytest.raises(TypeError, match=r"WrathPolicy\(\)"):
+        DataFlowKernel(Cluster.homogeneous(2), policy=[WrathPolicy])
+    with pytest.raises(TypeError, match="wrath"):
+        DataFlowKernel(Cluster.homogeneous(2), policy="wrath")
+
+
+def test_replica_win_completes_original_record_in_scope_stats():
+    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
+        with dfk.workflow("scoped") as wf:
+            fut = napper.options(policy=replicate(2))(3, duration=0.05)
+            assert fut.result(timeout=10) == 3
+        wf.wait(timeout=10)
+        st = wf.stats()
+        assert st["completed"] == 1 and st["running"] == 0, st
+
+
+def test_replicate_races_n_copies_on_distinct_nodes():
+    from repro.engine.cluster import current_node
+    ran_on = set()
+
+    @task
+    def where(duration=0.4):
+        ran_on.add(current_node().name)
+        time.sleep(duration)
+        return True
+
+    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
+        fut = where.options(policy=replicate(3))()
+        assert fut.result(timeout=10) is True
+        assert dfk.stats["replicas"] == 2      # n - 1 racing copies
+        time.sleep(0.6)                        # let the losing replicas finish
+    # placement diversity: original + copies all executed on distinct nodes
+    assert len(ran_on) == 3, ran_on
+
+
+def test_replicate_survives_original_terminal_failure():
+    """A healthy replica's result must win over the original's error."""
+    from repro.engine.cluster import current_node
+
+    @task(max_retries=0)
+    def picky():
+        if current_node().name.endswith("n000"):
+            raise ValueError("bad node")   # original lands here first
+        time.sleep(0.2)                    # replicas finish after the error
+        return "ok"
+
+    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
+        fut = picky.options(policy=replicate(3))()
+        assert fut.result(timeout=10) == "ok"
+        assert dfk.stats["retry_success"] == 0   # won by replica, not retry
+
+
+def test_replicate_all_attempts_fail_resolves_with_error():
+    @task(max_retries=0)
+    def doomed():
+        time.sleep(0.05)
+        raise ValueError("every attempt fails")
+
+    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
+        fut = doomed.options(policy=replicate(3))()
+        assert isinstance(fut.exception(timeout=10), ValueError)
+
+
+def test_subscope_created_after_cancel_is_cancelled():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        root = dfk.workflow("root")
+        root.cancel("killed")
+        late = root.workflow("late")       # born into a killed tree
+        assert late.cancelled
+        fut = add_one.options(workflow=late)(1)
+        assert isinstance(fut.exception(timeout=5), TaskCancelledError)
+
+
+def test_replicate_validate_rejects_bad_results():
+    attempts = []
+
+    @task(max_retries=0)
+    def once():
+        attempts.append(1)
+        return -1
+
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        fut = once.options(policy=replicate(2, validate=lambda r: r > 0))()
+        err = fut.exception(timeout=10)
+        from repro.api import ReplicationError
+        assert isinstance(err, ReplicationError)
+        assert "rejected by validator" in str(err)
+
+
+# --------------------------------------------------------------------- #
+# map(): kwargs_iter + explicit unpack
+# --------------------------------------------------------------------- #
+@task
+def combine(a, b=0, *, scale=1):
+    return (a + b) * scale
+
+
+def test_map_tuple_splat_default_and_opt_out():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        futs = dfk.map(combine, [(1, 2), (3, 4)])          # historical splat
+        assert [f.result(timeout=10) for f in futs] == [3, 7]
+
+        @task
+        def length(x):
+            return len(x)
+
+        futs = dfk.map(length, [(1, 2), (3, 4, 5)], unpack=False)
+        assert [f.result(timeout=10) for f in futs] == [2, 3]
+
+
+def test_map_kwargs_iter_zipped_and_alone():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        futs = dfk.map(combine, [1, 2],
+                       kwargs_iter=[{"b": 10}, {"b": 20, "scale": 2}])
+        assert [f.result(timeout=10) for f in futs] == [11, 44]
+        futs = dfk.map(combine, kwargs_iter=[{"a": 5, "b": 1}])
+        assert [f.result(timeout=10) for f in futs] == [6]
+
+
+def test_map_length_mismatch_and_empty_args_raise():
+    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
+        with pytest.raises(ValueError, match="lengths differ"):
+            dfk.map(combine, [1, 2, 3], kwargs_iter=[{"b": 1}])
+        with pytest.raises(ValueError, match="arg_iter"):
+            dfk.map(combine)
+
+
+# --------------------------------------------------------------------- #
+# shutdown resolves pending futures
+# --------------------------------------------------------------------- #
+def test_shutdown_cancels_pending_futures_with_runtime_error():
+    dfk = DataFlowKernel(Cluster.homogeneous(1, workers_per_node=1))
+    with dfk:
+        futs = [napper(i, duration=1.0) for i in range(3)]
+        time.sleep(0.3)
+        # exit while one task runs and two sit queued: nothing may hang
+    # the in-flight task finishes on its worker and delivers the result...
+    assert futs[0].result(timeout=10) == 0
+    # ...while queued tasks that will never run resolve with a clear error
+    for f in futs[1:]:
+        err = f.exception(timeout=1)   # resolved, not hung
+        assert isinstance(err, RuntimeError)
+        assert "shut down" in str(err)
+
+
+def test_per_call_policy_is_bound_to_engine():
+    """options(policy=ProactivePolicy()) must behave like the engine-level
+    spelling: the sentinel binds and predictive fast-fail fires."""
+    with DataFlowKernel(Cluster.homogeneous(2, memory_gb=8),
+                        monitor=MonitoringDatabase()) as dfk:
+        fut = hungry.options(policy=ProactivePolicy())(1)   # fits no node
+        with pytest.raises(Exception):
+            fut.result(timeout=10)
+        assert dfk.stats["fast_fails"] == 1
+        assert len(fut.record.attempts) == 0   # failed before any execution
+
+
+# --------------------------------------------------------------------- #
+# stack mechanics
+# --------------------------------------------------------------------- #
+def test_policy_stack_first_decisive_wins_and_review_runs():
+    order = []
+
+    class Abstains(ResiliencePolicy):
+        def on_failure(self, rec, report, ctx):
+            order.append("abstain")
+            return None
+
+    class Decides(ResiliencePolicy):
+        def on_failure(self, rec, report, ctx):
+            order.append("decide")
+            return RetryDecision(Action.FAIL, reason="decisive")
+
+    class Never(ResiliencePolicy):
+        def on_failure(self, rec, report, ctx):  # pragma: no cover
+            order.append("never")
+            return RetryDecision(Action.RETRY, reason="unreachable")
+
+    class Reviewer(ResiliencePolicy):
+        def review_decision(self, rec, report, decision, ctx):
+            order.append(f"review:{decision.reason}")
+            return decision
+
+    with DataFlowKernel(Cluster.homogeneous(2),
+                        policy=[Abstains(), Decides(), Never(), Reviewer()]) as dfk:
+        fut = fatal()
+        with pytest.raises(ValueError):
+            fut.result(timeout=10)
+    assert order == ["abstain", "decide", "review:decisive"]
+
+
+def test_baseline_fallback_when_no_policy_decides():
+    with DataFlowKernel(Cluster.homogeneous(2), default_retries=2) as dfk:
+        fut = fatal.options(max_retries=2)()
+        with pytest.raises(ValueError):
+            fut.result(timeout=10)
+        assert len(fut.record.attempts) == 3   # baseline: 1 + 2 retries
+
+
+def test_normalize_accepts_callables_and_stacks():
+    stack = PolicyStack([wrath_retry_handler, PolicyStack([WrathPolicy()])])
+    names = [type(p).__name__ for p in stack]
+    assert names == ["RetryHandlerPolicy", "WrathPolicy"]

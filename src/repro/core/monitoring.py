@@ -284,10 +284,21 @@ class MonitoringDatabase:
     profile samples); streaming profiles are O(1) per (template, node/pool).
     """
 
-    def __init__(self, retention: int = 512) -> None:
+    def __init__(self, retention: int = 512, *, clock: Any = None,
+                 keep_event_log: bool = False) -> None:
         if retention < 1:
             raise ValueError(f"retention must be >= 1, got {retention}")
         self.retention = retention
+        # injected time source (repro.engine.events.Clock); every stored
+        # timestamp goes through it so a virtual-clock engine produces
+        # virtual-time (and therefore deterministic) monitoring data
+        self.clock = clock
+        self._time = clock.time if clock is not None else time.time
+        # optional global ordered log of every task/system event — the
+        # deterministic-simulation plane's *event trace*.  Unbounded, so
+        # only enabled for finite scenario runs.
+        self.event_log: list[dict[str, Any]] | None = ([] if keep_event_log
+                                                       else None)
         self._lock = threading.RLock()
         self.task_events: dict[str, deque[dict[str, Any]]] = defaultdict(
             lambda: deque(maxlen=retention))
@@ -314,7 +325,7 @@ class MonitoringDatabase:
     def ingest(self, message: dict[str, Any]) -> None:
         kind = message.get("kind")
         if kind == "heartbeat":
-            self.heartbeat(message["node"], message.get("time", time.time()))
+            self.heartbeat(message["node"], message.get("time", self._time()))
         elif kind == "task_event":
             self.record_task_event(message["task_id"], message["event"],
                                    **message.get("data", {}))
@@ -352,16 +363,22 @@ class MonitoringDatabase:
 
     def record_task_event(self, task_id: str, event: str, **data: Any) -> None:
         with self._lock:
-            self.task_events[task_id].append(
-                {"event": event, "time": time.time(), **data})
+            entry = {"event": event, "time": self._time(), **data}
+            self.task_events[task_id].append(entry)
+            if self.event_log is not None:
+                self.event_log.append({"scope": "task", "task_id": task_id,
+                                       **entry})
 
     def record_system_event(self, event: str, **data: Any) -> None:
         with self._lock:
-            self.system_events.append({"event": event, "time": time.time(), **data})
+            entry = {"event": event, "time": self._time(), **data}
+            self.system_events.append(entry)
+            if self.event_log is not None:
+                self.event_log.append({"scope": "system", **entry})
 
     def record_resource_profile(self, node: str, profile: dict[str, float]) -> None:
         with self._lock:
-            self.resource_profiles[node].append({"time": time.time(), **profile})
+            self.resource_profiles[node].append({"time": self._time(), **profile})
 
     def record_task_placement(self, task_name: str, node: str, pool: str | None,
                               *, ok: bool, duration: float | None = None,

@@ -130,10 +130,13 @@ class ResiliencePolicyEngine:
         """
         if ctx.monitor is None:
             return
-        now = time.time()
+        now = ctx.now() if hasattr(ctx, "now") else time.time()
         beats = ctx.monitor.last_heartbeats()
         drained = getattr(ctx, "drained", None) or set()
-        for node in list(ctx.denylist):
+        # sorted, not set order: denylist_remove events land in the monitor's
+        # event log, and the sim plane's trace contract is "same seed =>
+        # identical trace on every machine" — hash order is per-process
+        for node in sorted(ctx.denylist):
             if node in drained:
                 continue
             last = beats.get(node)

@@ -105,8 +105,11 @@ class ProactiveSentinel:
 
     def _note(self, kind: str, reason: str, *, task_id: str | None = None,
               node: str | None = None, action: Action | None = None) -> None:
-        self.decisions.append(ProactiveDecision(
-            kind=kind, reason=reason, task_id=task_id, node=node, action=action))
+        decision = ProactiveDecision(
+            kind=kind, reason=reason, task_id=task_id, node=node, action=action)
+        if self.dfk is not None:
+            decision.time = self.dfk.clock.time()
+        self.decisions.append(decision)
         if self.dfk is not None and self.dfk.monitor is not None:
             self.dfk.monitor.record_system_event(
                 f"proactive_{kind}", task_id=task_id, node=node, reason=reason)
@@ -300,7 +303,7 @@ class ProactiveSentinel:
         dfk = self.dfk
         cfg = self.config
         stale_after = dfk.heartbeat_period * dfk.heartbeat_threshold
-        now = time.time()
+        now = dfk.clock.time()
         for node in dfk.cluster.all_nodes():
             health = dfk.monitor.node_health(node.name)
             if node.name in dfk.drained:

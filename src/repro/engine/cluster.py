@@ -65,6 +65,42 @@ class _WorkerKilled(BaseException):
     """Internal control-flow signal: the injected failure killed the worker."""
 
 
+def enforce_and_reserve(node: "Node", spec) -> float:
+    """The environment-enforcement chain run at task pickup.
+
+    Raises the matching Table III manifestation — hardware down, missing
+    package (ImportError analog), exceeded ulimit, OOM — or reserves the
+    task's memory on the node and returns the reserved GB (caller
+    releases it when the task finishes).  Shared by the real
+    :class:`Worker` and the simulation plane's ``SimExecutor`` so the two
+    can never diverge on how failures manifest.
+    """
+    if not node.healthy:
+        raise HardwareShutdownError(
+            f"node {node.name} hardware is down", node=node.name)
+    missing = set(spec.packages) - set(node.packages)
+    if missing:
+        raise EnvironmentMismatchError(
+            f"No module named {sorted(missing)[0]!r} on {node.name}",
+            missing_packages=tuple(sorted(missing)),
+            node=node.name,
+        )
+    if spec.open_files > node.ulimit_files:
+        raise UlimitExceededError(
+            f"OSError: [Errno 24] Too many open files "
+            f"(need {spec.open_files}, ulimit {node.ulimit_files})",
+            node=node.name,
+        )
+    with node._mem_lock:
+        if node.mem_in_use_gb + spec.memory_gb > node.memory_gb:
+            # the OS would OOM-kill: manifest as MemoryError
+            raise MemoryError(
+                f"cannot allocate {spec.memory_gb}GB on {node.name} "
+                f"({node.mem_in_use_gb}GB in use of {node.memory_gb}GB)")
+        node.mem_in_use_gb += spec.memory_gb
+    return spec.memory_gb
+
+
 def kill_current_worker(msg: str = "worker killed by injected failure") -> None:
     """Called from *inside* a task to simulate the worker process dying
     (Table III 'Worker-killed').  Raises a BaseException subclass so user
@@ -214,34 +250,12 @@ class Worker:
         err: BaseException | None = None
         result: Any = None
         try:
-            if not node.healthy:
-                raise HardwareShutdownError(
-                    f"node {node.name} hardware is down", node=node.name)
-            missing = set(spec.packages) - set(node.packages)
-            if missing:
-                raise EnvironmentMismatchError(
-                    f"No module named {sorted(missing)[0]!r} on {node.name}",
-                    missing_packages=tuple(sorted(missing)),
-                    node=node.name,
-                )
-            if spec.open_files > node.ulimit_files:
-                raise UlimitExceededError(
-                    f"OSError: [Errno 24] Too many open files "
-                    f"(need {spec.open_files}, ulimit {node.ulimit_files})",
-                    node=node.name,
-                )
-            with node._mem_lock:
-                if node.mem_in_use_gb + spec.memory_gb > node.memory_gb:
-                    # the OS would OOM-kill: manifest as MemoryError
-                    raise MemoryError(
-                        f"cannot allocate {spec.memory_gb}GB on {node.name} "
-                        f"({node.mem_in_use_gb}GB in use of {node.memory_gb}GB)")
-                node.mem_in_use_gb += spec.memory_gb
+            reserved = enforce_and_reserve(node, spec)
             try:
                 result = rec.fn(*rec.args, **rec.kwargs)
             finally:
                 with node._mem_lock:
-                    node.mem_in_use_gb -= spec.memory_gb
+                    node.mem_in_use_gb -= reserved
         except _WorkerKilled as wk:
             # the "process" died: this worker stops pulling tasks
             self.alive = False
@@ -257,11 +271,14 @@ class NodeManager:
     """Pilot-job node manager: spawns workers and heartbeats (paper §VI-A)."""
 
     def __init__(self, node: Node, on_result, heartbeat: Callable[[str, float], None] | None,
-                 heartbeat_period: float = 0.05):
+                 heartbeat_period: float = 0.05, clock: Any = None):
         self.node = node
         self.on_result = on_result
         self.heartbeat = heartbeat
         self.heartbeat_period = heartbeat_period
+        # heartbeat timestamps go through the engine clock so watchers
+        # comparing "now - last beat" agree on the timebase
+        self.clock = clock
         self._stop = threading.Event()
         self._hb_paused = threading.Event()
         self._hb_thread = threading.Thread(
@@ -310,7 +327,8 @@ class NodeManager:
         while not self._stop.is_set():
             if self.node.healthy:
                 if self.heartbeat is not None and not self._hb_paused.is_set():
-                    self.heartbeat(self.node.name, time.time())
+                    now = self.clock.time() if self.clock is not None else time.time()
+                    self.heartbeat(self.node.name, now)
                 # pilot-job managers track worker processes and respawn the
                 # dead (tasks queued behind a killed worker must not orphan)
                 self.restart_dead_workers()

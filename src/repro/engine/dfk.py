@@ -71,7 +71,7 @@ from repro.core.failures import (
     TaskCancelledError,
 )
 from repro.engine.cluster import Cluster
-from repro.engine.events import EventLoop
+from repro.engine.events import REAL_CLOCK, Clock, EventLoop
 from repro.engine.executor import Executor
 from repro.engine.policies import (
     PolicyStack,
@@ -139,10 +139,21 @@ class DataFlowKernel:
         speculative_execution: bool = False,  # deprecated: StragglerPolicy
         straggler_factor: float = 3.0,
         map_backpressure: int | None = None,
+        clock: Clock | None = None,
+        executor_factory: Any = None,
         _warn_legacy: bool = True,
     ):
         self.cluster = cluster
         self.monitor = monitor
+        # injected time source: every timer, heartbeat check, straggler
+        # sweep, retry delay and TTF stamp flows through this clock.  A
+        # virtual clock (repro.sim.VirtualClock) runs the whole engine in
+        # deterministic inline mode — see EventLoop.run_until.
+        self.clock = clock or REAL_CLOCK
+        # executor construction hook: (dfk, pool) -> Executor.  The sim
+        # plane swaps in SimExecutor so tasks execute inline on the event
+        # loop instead of on worker threads.
+        self._executor_factory = executor_factory
         self.scheduler = scheduler or RoundRobinScheduler()
         # canonical resilience configuration: an ordered policy stack.  The
         # deprecated kwargs adapt into equivalent single-element stacks
@@ -209,7 +220,8 @@ class DataFlowKernel:
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         self._outstanding = 0
-        self.events = EventLoop(name="dfk-events", on_error=self._on_event_error)
+        self.events = EventLoop(name="dfk-events", on_error=self._on_event_error,
+                                clock=self.clock)
 
         self.stats: dict[str, float] = {
             "submitted": 0, "completed": 0, "failed": 0, "dep_failed": 0,
@@ -237,15 +249,19 @@ class DataFlowKernel:
     def current(cls) -> "DataFlowKernel | None":
         return cls._current
 
-    def start(self) -> None:
-        self.stats["start_time"] = time.time()
-        self.scheduler.bind(cluster=self.cluster, monitor=self.monitor)
+    def _make_executor(self, pool) -> Executor:
         hb = self.monitor.heartbeat if self.monitor is not None else None
+        return Executor(
+            pool, self._on_result, scheduler=self.scheduler, heartbeat=hb,
+            denylisted=lambda node: node in self.denylist,
+            heartbeat_period=self.heartbeat_period, clock=self.clock)
+
+    def start(self) -> None:
+        self.stats["start_time"] = self.clock.time()
+        self.scheduler.bind(cluster=self.cluster, monitor=self.monitor)
+        factory = self._executor_factory or DataFlowKernel._make_executor
         for name, pool in self.cluster.pools.items():
-            ex = Executor(
-                pool, self._on_result, scheduler=self.scheduler, heartbeat=hb,
-                denylisted=lambda node: node in self.denylist,
-                heartbeat_period=self.heartbeat_period)
+            ex = factory(self, pool)
             ex.start()
             self.executors[name] = ex
         self.events.start()
@@ -274,9 +290,13 @@ class DataFlowKernel:
         # delivers the real result (a post-shutdown *failure* is made
         # terminal by _route_failure's shutting-down guard, so those
         # futures resolve too instead of waiting on a stopped event loop).
+        # Under a virtual clock there are no worker threads — a RUNNING
+        # task's completion is an event on the now-stopped loop, so it can
+        # never deliver; those futures must be resolved here too.
         pending = [rec for rec in list(self.tasks.values())
                    if rec.future is not None and not rec.future.done()
-                   and rec.state is not TaskState.RUNNING]
+                   and (rec.state is not TaskState.RUNNING
+                        or self.clock.virtual)]
         for rec in pending:
             self.cancel_task(
                 rec.task_id, reason="DataFlowKernel shut down",
@@ -332,7 +352,8 @@ class DataFlowKernel:
         return SchedulingContext(
             cluster=self.cluster, monitor=self.monitor,
             denylist=self.denylist, default_pool=self.default_pool,
-            scheduler=self.scheduler, drained=self.drained)
+            scheduler=self.scheduler, drained=self.drained,
+            clock=self.clock)
 
     def _on_event_error(self, event_name: str, err: BaseException) -> None:
         """Swallowed watcher/callback exceptions stay visible as events."""
@@ -378,7 +399,8 @@ class DataFlowKernel:
             wf_retries = wf.effective_retries()
             if wf_retries is not None:
                 default_retries = wf_retries
-        rec = new_task_record(td, args, kwargs, default_retries=default_retries)
+        rec = new_task_record(td, args, kwargs, default_retries=default_retries,
+                              now=self.clock.time())
         rec.workflow = wf
         rec.pool_default = td.pool or (wf.effective_pool() if wf else None)
         if wf is not None and rec.target_node is None:
@@ -480,7 +502,26 @@ class DataFlowKernel:
                 raise TypeError(
                     f"kwargs_iter elements must be dicts, got {type(kwargs).__name__}")
             if gate is not None:
-                gate.acquire()
+                if self.clock.virtual:
+                    # inline mode: a blocking acquire would deadlock (this
+                    # thread is the one that resolves tasks) — drive the
+                    # loop until a slot frees up instead.  The memoized
+                    # predicate acquires at most once, so a run that ends
+                    # without a slot (stopped loop, exhausted horizon) is
+                    # detected instead of leaking a phantom release later.
+                    held = {"ok": False}
+
+                    def _try_acquire() -> bool:
+                        if not held["ok"]:
+                            held["ok"] = gate.acquire(blocking=False)
+                        return held["ok"]
+
+                    if not self._drive_until(_try_acquire):
+                        raise RuntimeError(
+                            "map(): backpressure slot never freed (engine "
+                            "stopped or virtual horizon exhausted)")
+                else:
+                    gate.acquire()
                 fut = self.submit(td, args, dict(kwargs))
                 fut.add_done_callback(lambda _f, g=gate: g.release())
             else:
@@ -529,7 +570,7 @@ class DataFlowKernel:
         if self._done_first.get(rec.task_id) or rec.cancel_requested:
             return  # cancelled/resolved while queued for dispatch
         if rec.first_dispatch_time <= 0:
-            rec.first_dispatch_time = time.time()
+            rec.first_dispatch_time = self.clock.time()
         stack = rec.stack if rec.stack is not None else self.policies
         if stack._dispatchers:
             t0 = time.perf_counter()
@@ -604,7 +645,7 @@ class DataFlowKernel:
             self._done_first[task_id] = True
             rec.state = TaskState.FAILED
             rec.exception = err
-            rec.terminal_time = time.time()
+            rec.terminal_time = self.clock.time()
             self.stats["cancelled"] += 1
             self.stats["failed"] += 1
         if self.monitor is not None:
@@ -876,7 +917,7 @@ class DataFlowKernel:
         report = FailureReport.from_exception(
             err, task_id=rec.task_id, node=node, pool=pool, worker=worker,
             resource_profile=profile, requirements=rec.effective_resources().asdict(),
-            retry_count=rec.retry_count, timestamp=time.time())
+            retry_count=rec.retry_count, timestamp=self.clock.time())
         if self.monitor is not None:
             self.monitor.report_failure(report)
         return report
@@ -977,7 +1018,7 @@ class DataFlowKernel:
             self._done_first[rec.task_id] = True
             rec.state = TaskState.DEP_FAILED if is_dep else TaskState.FAILED
             rec.exception = err
-            rec.terminal_time = time.time()
+            rec.terminal_time = self.clock.time()
             self.stats["dep_failed" if is_dep else "failed"] += 1
         self._finish(rec, error=err)
         if not is_dep:
@@ -1032,7 +1073,7 @@ class DataFlowKernel:
     def _check_heartbeats(self) -> None:
         if self.monitor is None:
             return
-        now = time.time()
+        now = self.clock.time()
         stale_after = self.heartbeat_period * self.heartbeat_threshold
         for node_name, last in list(self.monitor.last_heartbeats().items()):
             node = self.cluster.find_node(node_name)
@@ -1098,7 +1139,7 @@ class DataFlowKernel:
         scope_ids: set[str] | None = None
         if scope is not None:
             scope_ids = {r.task_id for r in scope.tasks()}
-        now = time.time()
+        now = self.clock.time()
         for tid, rec in list(self.tasks.items()):
             if self._done_first.get(tid) or tid in self._speculated:
                 continue
@@ -1123,14 +1164,26 @@ class DataFlowKernel:
     # ------------------------------------------------------------------ #
     # sync helpers
     # ------------------------------------------------------------------ #
+    def _drive_until(self, predicate, timeout: float | None = None) -> bool:
+        """Virtual-clock engines *drive* the event loop instead of blocking
+        on it (the calling thread is the one that resolves tasks).
+        ``timeout`` is virtual seconds — default a generous simulated hour.
+        Returns the predicate's final value."""
+        deadline = self.clock.now() + (timeout if timeout is not None
+                                       else 3600.0)
+        self.events.run_until(predicate, deadline=deadline)
+        return bool(predicate())
+
     def wait_all(self, timeout: float | None = None) -> bool:
+        if self.clock.virtual:
+            return self._drive_until(lambda: self._outstanding <= 0, timeout)
         with self._all_done:
             if self._outstanding <= 0:
                 return True
             return self._all_done.wait(timeout)
 
     def makespan(self) -> float:
-        return time.time() - self.stats["start_time"]
+        return self.clock.time() - self.stats["start_time"]
 
     def success_rates(self) -> dict[str, float]:
         total = self.stats["submitted"]

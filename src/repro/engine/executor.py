@@ -16,6 +16,7 @@ from typing import Any, Callable
 
 from repro.core.failures import PilotJobInitError
 from repro.engine.cluster import Node, NodeManager, ResourcePool
+from repro.engine.events import REAL_CLOCK, Clock
 from repro.engine.scheduler import RoundRobinScheduler, Scheduler, node_load
 from repro.engine.task import TaskRecord
 
@@ -30,6 +31,7 @@ class Executor:
         heartbeat: Callable[[str, float], None] | None = None,
         denylisted: Callable[[str], bool] = lambda node: False,
         heartbeat_period: float = 0.05,
+        clock: Clock | None = None,
     ):
         self.pool = pool
         self.on_result = on_result
@@ -39,6 +41,7 @@ class Executor:
         self._lock = threading.Lock()
         self._heartbeat = heartbeat
         self._heartbeat_period = heartbeat_period
+        self.clock = clock or REAL_CLOCK
         self._started = False
 
     # -- pilot-job lifecycle ---------------------------------------------
@@ -46,7 +49,8 @@ class Executor:
         failures = []
         for node in self.pool.nodes:
             mgr = NodeManager(node, self.on_result, self._heartbeat,
-                              heartbeat_period=self._heartbeat_period)
+                              heartbeat_period=self._heartbeat_period,
+                              clock=self.clock)
             node.manager = mgr
             try:
                 mgr.start()

@@ -65,6 +65,18 @@ class SchedulingContext:
     # denylist); the policy engine's heartbeat-resume rule must not
     # un-denylist these — the sentinel owns their lifecycle (undrain)
     drained: set[str] = field(default_factory=set)
+    # the engine's time source (repro.engine.events.Clock | None).
+    # Handlers comparing "now" against monitor timestamps (heartbeat
+    # recency, backoff windows) must read it from here so they stay
+    # correct on a virtual clock.
+    clock: Any = None
+
+    def now(self) -> float:
+        """Wall-clock "now" on the engine's clock (real-time fallback)."""
+        if self.clock is not None:
+            return self.clock.time()
+        import time
+        return time.time()
 
 
 def baseline_retry_handler(record, report: FailureReport, ctx: SchedulingContext) -> RetryDecision:

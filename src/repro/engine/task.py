@@ -255,7 +255,8 @@ def task(
 
 
 def new_task_record(
-    td: TaskDef, args: tuple, kwargs: dict, *, default_retries: int
+    td: TaskDef, args: tuple, kwargs: dict, *, default_retries: int,
+    now: float | None = None
 ) -> TaskRecord:
     tid = f"task-{next(_task_counter):06d}"
     rec = TaskRecord(
@@ -266,7 +267,7 @@ def new_task_record(
         kwargs=kwargs,
         resources=td.resources,
         max_retries=td.max_retries if td.max_retries is not None else default_retries,
-        submit_time=time.time(),
+        submit_time=now if now is not None else time.time(),
     )
     rec.future = AppFuture(rec)
     return rec

@@ -209,7 +209,11 @@ class Workflow:
 
     def wait(self, timeout: float | None = None) -> bool:
         """Block until every task in the subtree resolved.  Returns False
-        on timeout."""
+        on timeout.  On a virtual-clock engine this *drives* the event
+        loop instead of blocking (``timeout`` is virtual seconds)."""
+        if self.dfk.clock.virtual:
+            return self.dfk._drive_until(
+                lambda: all(f.done() for f in self.futures()), timeout)
         pending = self.futures()
         done, not_done = _futures_wait(pending, timeout=timeout)
         return not not_done

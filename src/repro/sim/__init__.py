@@ -1,0 +1,76 @@
+"""Deterministic simulation plane (virtual time + seeded chaos).
+
+WRATH's claims are statements about behaviour under *many* failure
+interleavings; wall-clock tests can afford a handful.  This package runs
+the **real engine** — scheduler, event loop, retries, heartbeat and
+straggler watchers, proactive sentinel, policy stacks, workflow
+propagation — on a :class:`VirtualClock`: no threads, no sleeps, events
+execute inline in timestamp order, and a 60-second failure scenario
+costs microseconds.  On top of that sit a scenario DSL
+(:class:`Scenario`, seeded generation), a test harness
+(:class:`SimHarness`) and a :func:`campaign` runner that executes
+thousands of seeded chaos scenarios per CI run and checks the engine's
+invariants — reproducibly: **same seed, same event trace, byte for
+byte**.
+
+Quick start::
+
+    from repro.sim import SimCluster, SimHarness
+
+    with SimHarness(SimCluster.homogeneous(2),
+                    durations={"work": 0.3}) as h:
+        fut = work(7)                       # @task-decorated as usual
+        h.run_until(fut.done)
+        assert fut.result(timeout=0) == 7
+
+Chaos campaign (also ``python -m repro.sim --scenarios 500``)::
+
+    from repro.sim import campaign
+    report = campaign(500, base_seed=0)
+    assert report.ok, report.summary()
+"""
+from repro.sim.clock import VirtualClock
+from repro.sim.cluster import (
+    SimCluster,
+    SimExecutor,
+    SimNodeManager,
+    SimWorker,
+    sim_duration,
+)
+from repro.sim.harness import (
+    CampaignResult,
+    ScenarioResult,
+    SimHarness,
+    build_trace,
+    campaign,
+    run_scenario,
+)
+from repro.sim.scenario import (
+    FAULT_KINDS,
+    TASK_FAILURE_KINDS,
+    Fault,
+    NodeSpec,
+    Scenario,
+    SimTaskSpec,
+)
+
+__all__ = [
+    "VirtualClock",
+    "SimCluster",
+    "SimExecutor",
+    "SimNodeManager",
+    "SimWorker",
+    "sim_duration",
+    "SimHarness",
+    "ScenarioResult",
+    "CampaignResult",
+    "run_scenario",
+    "campaign",
+    "build_trace",
+    "Scenario",
+    "SimTaskSpec",
+    "NodeSpec",
+    "Fault",
+    "FAULT_KINDS",
+    "TASK_FAILURE_KINDS",
+]

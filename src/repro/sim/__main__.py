@@ -1,0 +1,71 @@
+"""Chaos-campaign CLI: ``python -m repro.sim --scenarios 500``.
+
+Runs N seeded scenarios on the deterministic simulation plane, checks
+the engine invariants plus same-seed trace determinism, and exits
+non-zero on any violation.  A failing seed is a complete reproduction
+recipe::
+
+    python -m repro.sim --scenarios 1 --base-seed <seed> --show-trace
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.engine.policies import ProactivePolicy, WrathPolicy
+from repro.sim.harness import campaign, run_scenario
+from repro.sim.scenario import Scenario
+
+
+def _policy_factory(name: str):
+    if name == "wrath":
+        return lambda: WrathPolicy()
+    if name == "wrath+proactive":
+        return lambda: [ProactivePolicy(), WrathPolicy()]
+    if name == "baseline":
+        return lambda: None
+    raise SystemExit(f"unknown --policy {name!r}")
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim",
+        description="seeded deterministic chaos campaign")
+    ap.add_argument("--scenarios", type=int, default=200,
+                    help="number of seeded scenarios (default 200)")
+    ap.add_argument("--base-seed", type=int, default=0)
+    ap.add_argument("--policy", default="wrath",
+                    choices=["baseline", "wrath", "wrath+proactive"])
+    ap.add_argument("--determinism-checks", type=int, default=3,
+                    help="re-run this many scenarios and compare traces")
+    ap.add_argument("--max-tasks", type=int, default=16)
+    ap.add_argument("--show-trace", action="store_true",
+                    help="print the first scenario's full event trace")
+    args = ap.parse_args(argv)
+
+    if args.show_trace:
+        result = run_scenario(
+            Scenario.random(args.base_seed, max_tasks=args.max_tasks),
+            policy_factory=_policy_factory(args.policy))
+        print(result.scenario.describe())
+        print(result.trace)
+        print(result.summary())
+        return 0 if result.ok else 1
+
+    report = campaign(
+        args.scenarios, base_seed=args.base_seed,
+        policy_factory=_policy_factory(args.policy),
+        determinism_checks=args.determinism_checks,
+        scenario_kwargs={"max_tasks": args.max_tasks})
+    print(report.summary())
+    if not report.ok:
+        for seed, viol in report.violations[:20]:
+            print(f"  seed={seed}: {viol}")
+        print("reproduce: python -m repro.sim --scenarios 1 "
+              "--base-seed <seed> --show-trace")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":  # pragma: no cover - CLI entry
+    sys.exit(main())

@@ -1,0 +1,24 @@
+"""Shared test helpers.
+
+``wait_until`` replaces bare ``time.sleep`` polling in the wall-clock
+(non-sim) tests: it polls a condition at a fine step and returns as soon
+as it holds, so tests wait exactly as long as needed instead of a
+guessed fixed sleep — faster when the engine is quick, deflaked when CI
+is slow.  Tests that can run entirely on virtual time should use
+:class:`repro.sim.SimHarness` instead.
+"""
+import time
+
+
+def wait_until(cond, timeout: float = 5.0, step: float = 0.01) -> bool:
+    """Poll ``cond()`` until truthy or ``timeout`` real seconds elapse.
+
+    Returns the final truth value, so callers write
+    ``assert wait_until(lambda: ...)``.
+    """
+    deadline = time.monotonic() + timeout
+    while time.monotonic() < deadline:
+        if cond():
+            return True
+        time.sleep(step)
+    return bool(cond())

@@ -20,6 +20,7 @@ from repro.api import (
     task,
 )
 from repro.core import wrath_retry_handler
+from repro.sim import SimCluster, SimHarness
 
 
 @task(memory_gb=1)
@@ -36,6 +37,17 @@ def hungry(x):
 def napper(x, duration=1.0):
     time.sleep(duration)
     return x
+
+
+@task
+def sim_napper(x, duration=1.0):
+    return x                  # its nap is the scripted *virtual* duration
+
+
+def _napper_durations(rec, node):
+    """Sim duration script: a task naps its own ``duration=`` kwarg
+    (virtually); templates without one fall through to their defaults."""
+    return rec.kwargs.get("duration")
 
 
 @task(max_retries=0)
@@ -135,53 +147,56 @@ def test_workflow_options_pin_beats_active_scope():
 def test_nested_cancel_kills_descendants_not_siblings_propagate_none():
     """Satellite acceptance: with propagate="none", cancelling a sub-scope
     kills its queued + running descendants while sibling scopes finish."""
-    with DataFlowKernel(Cluster.homogeneous(1, workers_per_node=2)) as dfk:
-        with dfk.workflow("root") as root:
+    with SimHarness(SimCluster.homogeneous(1, workers_per_node=2),
+                    durations=_napper_durations) as h:
+        with h.dfk.workflow("root") as root:
             with root.workflow("victim", propagate="none") as victim:
                 # 2 workers: first two run, the rest queue behind them
-                running = [napper(i, duration=3.0) for i in range(2)]
-                queued = [napper(i, duration=0.1) for i in range(4)]
+                running = [sim_napper(i, duration=3.0) for i in range(2)]
+                queued = [sim_napper(i, duration=0.1) for i in range(4)]
             with root.workflow("sibling") as sibling:
-                safe = [napper(i, duration=0.1) for i in range(2)]
-        time.sleep(0.3)        # let the first nappers reach RUNNING
+                safe = [sim_napper(i, duration=0.1) for i in range(2)]
+        h.advance(0.3)         # let the first nappers reach RUNNING
         n = victim.cancel("test cancel")
         assert n == len(running) + len(queued)
         for f in running + queued:
-            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+            assert isinstance(f.exception(timeout=0), TaskCancelledError)
         # sibling scope is untouched and completes
-        assert [f.result(timeout=20) for f in safe] == [0, 1]
+        assert [h.result(f, timeout=20) for f in safe] == [0, 1]
         assert victim.cancelled and not sibling.cancelled
         assert sibling.stats()["completed"] == 2
 
 
 def test_propagate_siblings_fast_fails_scope_subtree():
-    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
-        with dfk.workflow("root") as root:
+    with SimHarness(SimCluster.homogeneous(2),
+                    durations=_napper_durations) as h:
+        with h.dfk.workflow("root") as root:
             with root.workflow("doomed", propagate="siblings") as doomed:
-                sibs = [napper(i, duration=3.0) for i in range(3)]
+                sibs = [sim_napper(i, duration=3.0) for i in range(3)]
                 bad = fatal()
-            safe = napper(99, duration=0.1)
+            safe = sim_napper(99, duration=0.1)
         with pytest.raises(ValueError):
-            bad.result(timeout=10)
+            h.result(bad, timeout=10)
         # terminal failure of `bad` fast-fails its siblings...
         for f in sibs:
-            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+            assert isinstance(f.exception(timeout=0), TaskCancelledError)
         assert doomed.cancelled
         # ...but not the parent scope's other members
-        assert safe.result(timeout=20) == 99
+        assert h.result(safe, timeout=20) == 99
         assert not root.cancelled
 
 
 def test_propagate_ancestors_fast_fails_whole_tree():
-    with DataFlowKernel(Cluster.homogeneous(2)) as dfk:
-        with dfk.workflow("root") as root:
-            other = [napper(i, duration=3.0) for i in range(2)]
+    with SimHarness(SimCluster.homogeneous(2),
+                    durations=_napper_durations) as h:
+        with h.dfk.workflow("root") as root:
+            other = [sim_napper(i, duration=3.0) for i in range(2)]
             with root.workflow("stage", propagate="ancestors") as stage:
                 bad = fatal()
         with pytest.raises(ValueError):
-            bad.result(timeout=10)
+            h.result(bad, timeout=10)
         for f in other:        # the whole ancestor tree is cancelled
-            assert isinstance(f.exception(timeout=5), TaskCancelledError)
+            assert isinstance(f.exception(timeout=0), TaskCancelledError)
         assert root.cancelled and stage.cancelled
 
 
@@ -254,17 +269,17 @@ def test_replicate_races_n_copies_on_distinct_nodes():
     from repro.engine.cluster import current_node
     ran_on = set()
 
-    @task
-    def where(duration=0.4):
-        ran_on.add(current_node().name)
-        time.sleep(duration)
-        return True
+    with SimHarness(SimCluster.homogeneous(3, workers_per_node=1),
+                    durations={"where": 0.4}) as h:
+        @task
+        def where():
+            ran_on.add(current_node().name)
+            return True
 
-    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
         fut = where.options(policy=replicate(3))()
-        assert fut.result(timeout=10) is True
-        assert dfk.stats["replicas"] == 2      # n - 1 racing copies
-        time.sleep(0.6)                        # let the losing replicas finish
+        assert h.result(fut, timeout=10) is True
+        assert h.dfk.stats["replicas"] == 2    # n - 1 racing copies
+        h.advance(0.6)                         # let the losing replicas finish
     # placement diversity: original + copies all executed on distinct nodes
     assert len(ran_on) == 3, ran_on
 
@@ -273,28 +288,28 @@ def test_replicate_survives_original_terminal_failure():
     """A healthy replica's result must win over the original's error."""
     from repro.engine.cluster import current_node
 
-    @task(max_retries=0)
-    def picky():
-        if current_node().name.endswith("n000"):
-            raise ValueError("bad node")   # original lands here first
-        time.sleep(0.2)                    # replicas finish after the error
-        return "ok"
+    with SimHarness(SimCluster.homogeneous(3, workers_per_node=1),
+                    durations={"picky": 0.2}) as h:
+        @task(max_retries=0)
+        def picky():
+            if current_node().name.endswith("n000"):
+                raise ValueError("bad node")   # original lands here first
+            return "ok"                        # replicas finish at +0.2s
 
-    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
         fut = picky.options(policy=replicate(3))()
-        assert fut.result(timeout=10) == "ok"
-        assert dfk.stats["retry_success"] == 0   # won by replica, not retry
+        assert h.result(fut, timeout=10) == "ok"
+        assert h.dfk.stats["retry_success"] == 0   # won by replica, not retry
 
 
 def test_replicate_all_attempts_fail_resolves_with_error():
-    @task(max_retries=0)
-    def doomed():
-        time.sleep(0.05)
-        raise ValueError("every attempt fails")
+    with SimHarness(SimCluster.homogeneous(3, workers_per_node=1)) as h:
+        @task(max_retries=0)
+        def doomed():
+            raise ValueError("every attempt fails")
 
-    with DataFlowKernel(Cluster.homogeneous(3, workers_per_node=1)) as dfk:
         fut = doomed.options(policy=replicate(3))()
-        assert isinstance(fut.exception(timeout=10), ValueError)
+        h.run_until(fut.done, timeout=10)
+        assert isinstance(fut.exception(timeout=0), ValueError)
 
 
 def test_subscope_created_after_cancel_is_cancelled():

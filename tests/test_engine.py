@@ -1,12 +1,21 @@
-"""TBPP engine behaviour: DAG execution, resource enforcement, monitoring."""
+"""TBPP engine behaviour: DAG execution, resource enforcement, monitoring.
+
+Failure-timing scenarios (heartbeat loss, stragglers, worker kills,
+contention backoff) run on the deterministic simulation plane
+(:mod:`repro.sim`); the remaining wall-clock tests poll with
+:func:`helpers.wait_until` instead of fixed sleeps.
+"""
 import time
 
 import pytest
+from helpers import wait_until
 
-from repro.core import MonitoringDatabase, wrath_retry_handler
+from repro.core import MonitoringDatabase
 from repro.core.failures import EnvironmentMismatchError, UlimitExceededError
 from repro.core.monitoring import TCPRadio, TCPRadioServer, SystemMonitoringAgent
 from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+from repro.engine.policies import StragglerPolicy, WrathPolicy
+from repro.sim import SimCluster, SimHarness
 
 
 @pytest.fixture()
@@ -104,60 +113,51 @@ def test_ulimit_enforced():
             files().result(timeout=10)
 
 
-def test_transient_contention_retry_succeeds(mon):
+def test_transient_contention_retry_succeeds():
     """Two 6 GB tasks on one 8 GB node: the loser backs off and succeeds."""
-    cluster = Cluster.homogeneous(1, memory_gb=8, workers_per_node=2)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        default_retries=6) as dfk:
+    cluster = SimCluster.homogeneous(1, memory_gb=8, workers_per_node=2)
+    with SimHarness(cluster, durations={"hold": 0.2}, policy=WrathPolicy(),
+                    default_retries=6) as h:
         @task(memory_gb=6)
         def hold(t):
-            time.sleep(t)
             return t
 
         futs = [hold(0.2), hold(0.2)]
-        assert [f.result(timeout=15) for f in futs] == [0.2, 0.2]
-        assert dfk.stats["retries"] >= 1  # the loser was retried with backoff
+        assert [h.result(f, timeout=15) for f in futs] == [0.2, 0.2]
+        assert h.dfk.stats["retries"] >= 1  # the loser was retried with backoff
 
 
-def test_heartbeats_flow_to_monitor(mon):
-    cluster = Cluster.homogeneous(2)
-    with DataFlowKernel(cluster, monitor=mon) as dfk:
-        time.sleep(0.25)
-        beats = mon.last_heartbeats()
-    assert len(beats) == 2
-    assert all(time.time() - t < 5 for t in beats.values())
+def test_heartbeats_flow_to_monitor():
+    with SimHarness(SimCluster.homogeneous(2)) as h:
+        h.advance(0.25)
+        beats = h.monitor.last_heartbeats()
+        assert len(beats) == 2
+        assert all(h.clock.time() - t < 5 for t in beats.values())
 
 
-def test_hardware_shutdown_detected_and_rerouted(mon):
+def test_hardware_shutdown_detected_and_rerouted():
     """Kill a node mid-run: heartbeat loss reroutes its tasks (WRATH)."""
-    cluster = Cluster.homogeneous(3, workers_per_node=1)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        default_retries=3, heartbeat_period=0.03,
-                        heartbeat_threshold=3) as dfk:
+    cluster = SimCluster.homogeneous(3, workers_per_node=1)
+    with SimHarness(cluster, durations={"slow": 0.3}, policy=WrathPolicy(),
+                    default_retries=3, heartbeat_period=0.03,
+                    heartbeat_threshold=3) as h:
         @task
         def slow(x):
-            time.sleep(0.3)
             return x
 
         futs = [slow(i) for i in range(3)]
-        time.sleep(0.05)
-        victim = cluster.all_nodes()[0]
-        victim.shutdown_hardware()
-        results = sorted(f.result(timeout=30) for f in futs)
+        h.advance(0.05)
+        h.fail_node(cluster.all_nodes()[0].name)
+        results = sorted(h.result(f, timeout=30) for f in futs)
         assert results == [0, 1, 2]
-    events = [e["event"] for e in mon.system_events]
+    events = [e["event"] for e in h.monitor.system_events]
     assert "heartbeat_lost" in events or "denylist_add" in events
 
 
 def test_worker_killed_respawns():
     from repro.engine.cluster import kill_current_worker
-    cluster = Cluster.homogeneous(2, workers_per_node=1)
-    mon = MonitoringDatabase()
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        default_retries=2) as dfk:
+    cluster = SimCluster.homogeneous(2, workers_per_node=1)
+    with SimHarness(cluster, policy=WrathPolicy(), default_retries=2) as h:
         killed = {"done": False}
 
         @task
@@ -167,9 +167,9 @@ def test_worker_killed_respawns():
                 kill_current_worker()
             return "survived"
 
-        assert murder().result(timeout=15) == "survived"
+        assert h.result(murder(), timeout=15) == "survived"
         # node managers respawn killed workers
-        time.sleep(0.2)
+        h.advance(0.2)
         for node in cluster.all_nodes():
             assert sum(1 for w in node.workers if w.alive) >= 1
 
@@ -177,25 +177,22 @@ def test_worker_killed_respawns():
 def test_speculative_execution_beats_straggler():
     nodes = [Node("fast", speed=1.0, workers_per_node=1),
              Node("slug", speed=0.02, workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
-    mon = MonitoringDatabase()
-    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
-                        straggler_factor=2.0, heartbeat_period=0.03) as dfk:
-        from repro.engine.cluster import simwork
-
+    cluster = SimCluster([ResourcePool("p", nodes)])
+    with SimHarness(cluster, durations={"work": 0.1},
+                    policy=[StragglerPolicy(2.0)],
+                    heartbeat_period=0.03) as h:
         @task(est_duration_s=0.1)
         def work(x):
-            simwork(0.1)
             return x
 
         # keep "fast" busy briefly so one task lands on the straggler
         futs = [work(i) for i in range(2)]
-        t0 = time.time()
-        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
-        elapsed = time.time() - t0
+        t0 = h.clock.now()
+        assert sorted(h.result(f, timeout=30) for f in futs) == [0, 1]
+        elapsed = h.clock.now() - t0
         # without speculation the straggler task would take ~5s (0.1/0.02)
         assert elapsed < 4.0
-    assert dfk.stats["speculations"] >= 1
+    assert h.dfk.stats["speculations"] >= 1
 
 
 def test_tcp_radio_roundtrip(mon):
@@ -205,13 +202,8 @@ def test_tcp_radio_roundtrip(mon):
         radio.send({"kind": "heartbeat", "node": "tcp-node", "time": time.time()})
         radio.send({"kind": "task_event", "task_id": "t1", "event": "submitted",
                     "data": {"name": "x"}})
-        deadline = time.time() + 5
-        while time.time() < deadline and (
-                "tcp-node" not in mon.last_heartbeats()
-                or not mon.events_for("t1")):
-            time.sleep(0.01)
-        assert "tcp-node" in mon.last_heartbeats()
-        assert mon.events_for("t1")
+        assert wait_until(lambda: "tcp-node" in mon.last_heartbeats()
+                          and mon.events_for("t1"))
         radio.close()
     finally:
         server.stop()
@@ -220,9 +212,8 @@ def test_tcp_radio_roundtrip(mon):
 def test_system_monitoring_agent_heartbeats(mon):
     from repro.core.monitoring import InProcRadio
     agent = SystemMonitoringAgent("comp-x", InProcRadio(mon), period=0.02).start()
-    time.sleep(0.1)
+    assert wait_until(lambda: "comp-x" in mon.last_heartbeats())
     agent.stop()
-    assert "comp-x" in mon.last_heartbeats()
 
 
 def test_placement_history(mon):

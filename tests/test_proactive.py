@@ -1,7 +1,10 @@
 """Proactive resilience plane: task lifecycle, cancellation, predictive
-fast-fail, node drain, and the profile-driven application planes."""
-import time
+fast-fail, node drain, and the profile-driven application planes.
 
+The wall-clock-heavy scenarios (running/cancel/preempt/speculate/drain
+lifecycles) run on the deterministic simulation plane
+(:mod:`repro.sim`): virtual time, no sleeps, identical engine code.
+"""
 import pytest
 
 from repro.core import MonitoringDatabase, wrath_retry_handler
@@ -13,8 +16,10 @@ from repro.core.failures import (
 from repro.core.policy import ResiliencePolicyEngine
 from repro.core.proactive import ProactiveConfig
 from repro.engine import Cluster, DataFlowKernel, Node, ResourcePool, task
+from repro.engine.policies import ProactivePolicy, StragglerPolicy, WrathPolicy
 from repro.engine.retry_api import SchedulingContext
 from repro.engine.task import TaskState
+from repro.sim import SimCluster, SimHarness
 
 
 @pytest.fixture()
@@ -22,88 +27,77 @@ def mon():
     return MonitoringDatabase()
 
 
-def _wait(pred, timeout=5.0, step=0.01):
-    deadline = time.time() + timeout
-    while time.time() < deadline:
-        if pred():
-            return True
-        time.sleep(step)
-    return pred()
-
-
 # ------------------------------------------------- task-state lifecycle --
-def test_worker_marks_running(mon):
-    cluster = Cluster.homogeneous(1, workers_per_node=1)
-    with DataFlowKernel(cluster, monitor=mon) as dfk:
+def test_worker_marks_running():
+    cluster = SimCluster.homogeneous(1, workers_per_node=1)
+    with SimHarness(cluster, durations={"sleeper": 0.3}) as h:
         @task
         def sleeper():
-            time.sleep(0.3)
             return "ok"
 
         fut = sleeper()
-        assert _wait(lambda: fut.record.state is TaskState.RUNNING, timeout=2)
-        assert fut.result(timeout=10) == "ok"
+        assert h.run_until(lambda: fut.record.state is TaskState.RUNNING,
+                           timeout=2)
+        assert h.result(fut, timeout=10) == "ok"
         assert fut.record.state is TaskState.COMPLETED
 
 
-def test_straggler_watcher_matches_running_with_profile_estimate(mon):
+def test_straggler_watcher_matches_running_with_profile_estimate():
     """The straggler watcher fires on RUNNING tasks using the monitoring
     database's profile-derived duration estimate (no static est)."""
     nodes = [Node("fast", speed=1.0, workers_per_node=1),
              Node("slug", speed=0.02, workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
-    # template profile: this task normally takes ~0.1s (>= 3 samples)
-    for _ in range(3):
-        mon.record_task_placement("work", "fast", "p", ok=True, duration=0.1)
-    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
-                        straggler_factor=2.0, heartbeat_period=0.03) as dfk:
-        from repro.engine.cluster import simwork
+    cluster = SimCluster([ResourcePool("p", nodes)])
+    with SimHarness(cluster, durations={"work": 0.1},
+                    policy=[StragglerPolicy(2.0)],
+                    heartbeat_period=0.03) as h:
+        # template profile: this task normally takes ~0.1s (>= 3 samples)
+        for _ in range(3):
+            h.monitor.record_task_placement("work", "fast", "p", ok=True,
+                                            duration=0.1)
 
         @task  # NOTE: no est_duration_s — the estimate comes from profiles
         def work(x):
-            simwork(0.1)
             return x
 
         futs = [work(i) for i in range(2)]
-        t0 = time.time()
-        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
-        # without speculation the slug-placed task would take ~5s
-        assert time.time() - t0 < 4.0
-    assert dfk.stats["speculations"] >= 1
+        t0 = h.clock.now()
+        assert sorted(h.result(f, timeout=30) for f in futs) == [0, 1]
+        # without speculation the slug-placed task would take ~5 virtual s
+        assert h.clock.now() - t0 < 4.0
+    assert h.dfk.stats["speculations"] >= 1
 
 
-def test_node_loss_fails_running_tasks(mon):
+def test_node_loss_fails_running_tasks():
     """_fail_tasks_on_node's RUNNING arm: a task mid-execution on a dying
     node is failed by the heartbeat watcher and rerouted."""
-    cluster = Cluster.homogeneous(2, workers_per_node=1)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        default_retries=3, heartbeat_period=0.03,
-                        heartbeat_threshold=3) as dfk:
+    cluster = SimCluster.homogeneous(2, workers_per_node=1)
+    with SimHarness(cluster, durations={"slow": 0.5}, policy=WrathPolicy(),
+                    default_retries=3, heartbeat_period=0.03,
+                    heartbeat_threshold=3) as h:
         @task
         def slow(x):
-            time.sleep(0.5)
             return x
 
         futs = [slow(i) for i in range(2)]
         # wait until both tasks are RUNNING (one per node), then kill one
-        assert _wait(lambda: sum(1 for f in futs
-                                 if f.record.state is TaskState.RUNNING) == 2,
-                     timeout=3)
-        cluster.all_nodes()[0].shutdown_hardware()
-        assert sorted(f.result(timeout=30) for f in futs) == [0, 1]
-    events = [e["event"] for e in mon.system_events]
+        assert h.run_until(
+            lambda: sum(1 for f in futs
+                        if f.record.state is TaskState.RUNNING) == 2,
+            timeout=3)
+        h.fail_node(cluster.all_nodes()[0].name)
+        assert sorted(h.result(f, timeout=30) for f in futs) == [0, 1]
+    events = [e["event"] for e in h.monitor.system_events]
     assert "heartbeat_lost" in events
 
 
 # ------------------------------------------------------- cancellation --
-def test_cancel_queued_task_never_runs(mon):
-    cluster = Cluster.homogeneous(1, workers_per_node=1)
+def test_cancel_queued_task_never_runs():
+    cluster = SimCluster.homogeneous(1, workers_per_node=1)
     ran = []
-    with DataFlowKernel(cluster, monitor=mon) as dfk:
+    with SimHarness(cluster, durations={"sleeper": 0.4}) as h:
         @task
         def sleeper():
-            time.sleep(0.4)
             return "slept"
 
         @task
@@ -112,53 +106,53 @@ def test_cancel_queued_task_never_runs(mon):
             return "ran"
 
         first = sleeper()
-        assert _wait(lambda: first.record.state is TaskState.RUNNING, timeout=2)
+        assert h.run_until(lambda: first.record.state is TaskState.RUNNING,
+                           timeout=2)
         queued = tracked()
-        assert _wait(lambda: queued.record.state is TaskState.SCHEDULED,
-                     timeout=2)
-        assert dfk.cancel_task(queued.task_id, reason="test cancel")
+        assert h.run_until(
+            lambda: queued.record.state is TaskState.SCHEDULED, timeout=2)
+        assert h.dfk.cancel_task(queued.task_id, reason="test cancel")
         with pytest.raises(TaskCancelledError):
-            queued.result(timeout=10)
-        assert first.result(timeout=10) == "slept"
-        dfk.wait_all(timeout=10)
+            h.result(queued, timeout=10)
+        assert h.result(first, timeout=10) == "slept"
+        h.wait_all(timeout=10)
     assert ran == []                          # really cancelled, never ran
-    assert dfk.stats["cancelled"] == 1
+    assert h.dfk.stats["cancelled"] == 1
     assert queued.record.state is TaskState.FAILED
     assert queued.record.terminal_time > 0
     # cancelling an already-resolved task is a no-op
-    assert not dfk.cancel_task(queued.task_id)
+    assert not h.dfk.cancel_task(queued.task_id)
 
 
-def test_preempt_running_task_releases_memory_and_sets_future_once(mon):
+def test_preempt_running_task_releases_memory_and_sets_future_once():
     nodes = [Node("a", memory_gb=8, workers_per_node=1),
              Node("b", memory_gb=8, workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
-    with DataFlowKernel(cluster, monitor=mon) as dfk:
+    cluster = SimCluster([ResourcePool("p", nodes)])
+    with SimHarness(cluster, durations={"chunky": 0.3}) as h:
         @task(memory_gb=4)
         def chunky(x):
-            time.sleep(0.3)
             return x * 2
 
         fut = chunky(21)
-        assert _wait(lambda: fut.record.state is TaskState.RUNNING, timeout=2)
-        node = cluster.find_node(dfk._assignment[fut.task_id][1])
+        assert h.run_until(lambda: fut.record.state is TaskState.RUNNING,
+                           timeout=2)
+        node = cluster.find_node(h.dfk._assignment[fut.task_id][1])
         assert node.mem_in_use_gb == 4.0
-        assert dfk.preempt_task(fut.task_id, reason="test migration")
-        assert fut.result(timeout=10) == 42       # single winner, no double-set
-        dfk.wait_all(timeout=10)
-    assert dfk.stats["preemptions"] == 1
-    # both the original's and the copy's reservations are released
-    assert _wait(lambda: all(n.mem_in_use_gb == 0.0
-                             for n in cluster.all_nodes()), timeout=5)
+        assert h.dfk.preempt_task(fut.task_id, reason="test migration")
+        assert h.result(fut, timeout=10) == 42    # single winner, no double-set
+        # both the original's and the copy's reservations are released
+        assert h.run_until(lambda: all(n.mem_in_use_gb == 0.0
+                                       for n in cluster.all_nodes()),
+                           timeout=5)
+    assert h.dfk.stats["preemptions"] == 1
 
 
-def test_preempt_queued_task_moves_to_another_node(mon):
+def test_preempt_queued_task_moves_to_another_node():
     nodes = [Node("a", workers_per_node=1), Node("b", workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
-    with DataFlowKernel(cluster, monitor=mon) as dfk:
+    cluster = SimCluster([ResourcePool("p", nodes)])
+    with SimHarness(cluster, durations={"sleeper": 0.3}) as h:
         @task
         def sleeper(x):
-            time.sleep(0.3)
             return x
 
         @task
@@ -166,48 +160,49 @@ def test_preempt_queued_task_moves_to_another_node(mon):
             return "quick"
 
         s1, s2 = sleeper(1), sleeper(2)       # occupy both workers
-        assert _wait(lambda: s1.record.state is TaskState.RUNNING
-                     and s2.record.state is TaskState.RUNNING, timeout=2)
+        assert h.run_until(lambda: s1.record.state is TaskState.RUNNING
+                           and s2.record.state is TaskState.RUNNING,
+                           timeout=2)
         q = quick()                            # queued behind a sleeper
-        assert _wait(lambda: q.record.state is TaskState.SCHEDULED, timeout=2)
-        before = dfk._assignment[q.task_id][1]
-        assert dfk.preempt_task(q.task_id, reason="rebalance")
-        assert q.result(timeout=10) == "quick"
-        after = dfk._assignment[q.task_id][1]
+        assert h.run_until(lambda: q.record.state is TaskState.SCHEDULED,
+                           timeout=2)
+        before = h.dfk._assignment[q.task_id][1]
+        assert h.dfk.preempt_task(q.task_id, reason="rebalance")
+        assert h.result(q, timeout=10) == "quick"
+        after = h.dfk._assignment[q.task_id][1]
         assert after != before                 # really moved off the node
-        dfk.wait_all(timeout=10)
-    assert dfk.stats["preemptions"] == 1
+        h.wait_all(timeout=10)
+    assert h.dfk.stats["preemptions"] == 1
 
 
-def test_speculative_copy_cancelled_when_original_wins(mon):
+def test_speculative_copy_cancelled_when_original_wins():
     nodes = [Node("a", workers_per_node=1), Node("b", workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
+    cluster = SimCluster([ResourcePool("p", nodes)])
     executions = []
-    with DataFlowKernel(cluster, monitor=mon, speculative_execution=True,
-                        straggler_factor=1.5, heartbeat_period=0.02) as dfk:
+    with SimHarness(cluster, durations={"hog": 1.0, "work": 0.3},
+                    policy=[StragglerPolicy(1.5)],
+                    heartbeat_period=0.02) as h:
         @task
         def hog():
-            time.sleep(1.0)
             return "hog"
 
         @task(est_duration_s=0.05)
         def work():
             executions.append(1)
-            time.sleep(0.3)   # looks like a straggler vs the 0.05s estimate
-            return "done"
+            return "done"      # 0.3 virtual s: a straggler vs the 0.05s est
 
         # round-robin: hog occupies node a, work runs on node b; the
         # speculative copy of work avoids b, so it queues behind the hog
         hog_fut = hog()
-        assert _wait(lambda: hog_fut.record.state is TaskState.RUNNING,
-                     timeout=2)
+        assert h.run_until(
+            lambda: hog_fut.record.state is TaskState.RUNNING, timeout=2)
         fut = work()
-        assert fut.result(timeout=15) == "done"
-        assert dfk.stats["speculations"] >= 1
-        hog_fut.result(timeout=15)
-        dfk.wait_all(timeout=15)
+        assert h.result(fut, timeout=15) == "done"
+        assert h.dfk.stats["speculations"] >= 1
+        assert h.result(hog_fut, timeout=15) == "hog"
+        h.wait_all(timeout=15)
         # give the hog's worker a beat to drain (and skip) the cancelled copy
-        time.sleep(0.3)
+        h.advance(0.3)
     assert executions == [1]   # the backup copy was cancelled before running
 
 
@@ -250,21 +245,20 @@ def test_streak_fast_fail_cuts_retry_budget(mon):
     assert any(d.kind == "streak_fail" for d in dfk.sentinel.decisions)
 
 
-def test_proactive_leaves_recoverable_contention_alone(mon):
+def test_proactive_leaves_recoverable_contention_alone():
     """Transient contention is placement-fixable: the sentinel must not
     fast-fail tasks that fit the node once it is idle."""
-    cluster = Cluster.homogeneous(1, memory_gb=8, workers_per_node=2)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        proactive=True, default_retries=6) as dfk:
+    cluster = SimCluster.homogeneous(1, memory_gb=8, workers_per_node=2)
+    with SimHarness(cluster, durations={"hold": 0.2},
+                    policy=[ProactivePolicy(), WrathPolicy()],
+                    default_retries=6) as h:
         @task(memory_gb=6)
         def hold(t):
-            time.sleep(t)
             return t
 
         futs = [hold(0.2), hold(0.2)]
-        assert [f.result(timeout=15) for f in futs] == [0.2, 0.2]
-    assert dfk.stats["fast_fails"] == 0
+        assert [h.result(f, timeout=15) for f in futs] == [0.2, 0.2]
+    assert h.dfk.stats["fast_fails"] == 0
 
 
 def test_proactive_fast_fail_respects_feasible_big_pool(mon):
@@ -284,64 +278,64 @@ def test_proactive_fast_fail_respects_feasible_big_pool(mon):
 
 
 # --------------------------------------------------------------- drain --
-def test_drain_on_heartbeat_trend_then_undrain(mon):
-    cluster = Cluster.homogeneous(2, workers_per_node=1)
+def test_drain_on_heartbeat_trend_then_undrain():
+    cluster = SimCluster.homogeneous(2, workers_per_node=1)
     cfg = ProactiveConfig(period=0.02)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        proactive=cfg, heartbeat_period=0.03,
-                        heartbeat_threshold=5) as dfk:
+    with SimHarness(cluster, policy=[ProactivePolicy(cfg), WrathPolicy()],
+                    heartbeat_period=0.03, heartbeat_threshold=5) as h:
         # let heartbeats establish, then silence one node's agent while its
         # workers stay alive — the "trending toward silence" scenario
-        time.sleep(0.2)
+        h.advance(0.2)
         victim = cluster.all_nodes()[0]
-        victim.manager.pause_heartbeats()
-        assert _wait(lambda: victim.name in dfk.drained, timeout=5)
-        assert victim.name in dfk.denylist
-        events = [e["event"] for e in mon.system_events]
+        h.pause_heartbeats(victim.name)
+        assert h.run_until(lambda: victim.name in h.dfk.drained, timeout=5)
+        assert victim.name in h.dfk.denylist
+        events = [e["event"] for e in h.monitor.system_events]
         assert "node_drain" in events
         # heartbeats resume -> the sentinel undrains (policy engine's
         # resume rule must NOT have done it while drained)
-        victim.manager.resume_heartbeats()
-        assert _wait(lambda: victim.name not in dfk.drained, timeout=5)
-        assert victim.name not in dfk.denylist
-        assert "node_undrain" in [e["event"] for e in mon.system_events]
-    assert dfk.stats["drains"] == 1
+        h.resume_heartbeats(victim.name)
+        assert h.run_until(lambda: victim.name not in h.dfk.drained,
+                           timeout=5)
+        assert victim.name not in h.dfk.denylist
+        assert "node_undrain" in [e["event"] for e in h.monitor.system_events]
+    assert h.dfk.stats["drains"] == 1
 
 
-def test_drain_on_memory_trend_preempts_running_task(mon):
+def test_drain_on_memory_trend_preempts_running_task():
     nodes = [Node("leaky", memory_gb=16, workers_per_node=1),
              Node("stable", memory_gb=16, workers_per_node=1)]
-    cluster = Cluster([ResourcePool("p", nodes)])
+    cluster = SimCluster([ResourcePool("p", nodes)])
     cfg = ProactiveConfig(period=0.02, oom_horizon_s=2.0)
-    with DataFlowKernel(cluster, monitor=mon,
-                        retry_handler=wrath_retry_handler(),
-                        proactive=cfg, heartbeat_period=0.03) as dfk:
+    with SimHarness(cluster, durations={"victim_task": 0.6},
+                    policy=[ProactivePolicy(cfg), WrathPolicy()],
+                    heartbeat_period=0.03) as h:
         @task
         def victim_task():
-            time.sleep(0.6)
             return "survived"
 
         # aim the first dispatch at the leaky node
         fut = victim_task()
-        assert _wait(lambda: dfk._assignment.get(fut.task_id) is not None,
-                     timeout=2)
-        leaky_name = dfk._assignment[fut.task_id][1]
+        assert h.run_until(
+            lambda: h.dfk._assignment.get(fut.task_id) is not None, timeout=2)
+        leaky_name = h.dfk._assignment[fut.task_id][1]
         # stream a memory-growth trend for whichever node runs the task
         for i in range(8):
-            mon.record_resource_profile(leaky_name,
-                                        {"sim_mem_in_use_gb": 2.0 * i,
-                                         "sim_mem_capacity_gb": 16.0})
-            time.sleep(0.02)
-        assert _wait(lambda: leaky_name in dfk.drained, timeout=5)
-        assert fut.result(timeout=15) == "survived"
-        dfk.wait_all(timeout=15)
-    assert dfk.stats["drains"] == 1
-    assert dfk.stats["preemptions"] >= 1
-    assert any(e["event"] == "node_drain" for e in mon.system_events)
+            h.monitor.record_resource_profile(
+                leaky_name, {"sim_mem_in_use_gb": 2.0 * i,
+                             "sim_mem_capacity_gb": 16.0})
+            h.advance(0.02)
+        assert h.run_until(lambda: leaky_name in h.dfk.drained, timeout=5)
+        assert h.result(fut, timeout=15) == "survived"
+        h.wait_all(timeout=15)
+    assert h.dfk.stats["drains"] == 1
+    assert h.dfk.stats["preemptions"] >= 1
+    assert any(e["event"] == "node_drain" for e in h.monitor.system_events)
 
 
 def test_policy_resume_rule_skips_drained_nodes(mon):
+    import time
+
     cluster = Cluster.homogeneous(2)
     engine = ResiliencePolicyEngine()
     mon.heartbeat("default-n000", time.time())

@@ -3,6 +3,7 @@ import threading
 import time
 
 import pytest
+from helpers import wait_until
 
 from repro.core import MonitoringDatabase, wrath_retry_handler
 from repro.core.failures import ResourceStarvationError
@@ -277,7 +278,8 @@ def test_heartbeat_resumed_recorded_once_per_transition():
     with DataFlowKernel(cluster, monitor=mon, heartbeat_period=0.02,
                         heartbeat_threshold=3) as dfk:
         victim = cluster.all_nodes()[0]
-        time.sleep(0.1)               # heartbeats flowing
+        assert wait_until(               # heartbeats flowing
+            lambda: victim.name in mon.last_heartbeats(), timeout=5)
         dfk.denylist.add(victim.name)  # denylisted but still heartbeating
         time.sleep(0.3)               # many watcher ticks
         resumed = [e for e in mon.system_events

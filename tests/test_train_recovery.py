@@ -1,8 +1,15 @@
 """Training-plane WRATH: recovery from host loss, NaN, stragglers, OOM;
-checkpoint-resume continuity; elastic re-meshing."""
+checkpoint-resume continuity; elastic re-meshing.
+
+Every test here drives real multi-second jax training sweeps, so the
+whole module runs in the ``slow`` CI job (``pytest -m slow``)."""
+import pytest
+
 from repro.configs import get_smoke_config
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor
+
+pytestmark = pytest.mark.slow
 
 
 def mk(tmp_path, tag, **kw):

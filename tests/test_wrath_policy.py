@@ -2,6 +2,7 @@
 import time
 
 import pytest
+from helpers import wait_until
 
 from repro.core import MonitoringDatabase, wrath_retry_handler
 from repro.core.categorization import FailureCategorizationEngine
@@ -214,15 +215,20 @@ def test_denylist_added_on_shutdown_and_removed_on_resume():
             return x
 
         futs = [slow(i) for i in range(3)]
-        time.sleep(0.05)
         victim = cluster.all_nodes()[0]
+        assert wait_until(lambda: all(f.record.start_time > 0 for f in futs),
+                          timeout=5)
         victim.shutdown_hardware()
         for f in futs:
             f.result(timeout=30)
         assert victim.name in dfk.denylist
-        # resurrect: heartbeats resume, next decision refreshes the denylist
+        # resurrect: wait for a heartbeat *after* the restore, then the
+        # next decision refreshes the denylist
+        t_restore = time.time()
         victim.restore_hardware()
-        time.sleep(0.3)
+        assert wait_until(
+            lambda: mon.last_heartbeats().get(victim.name, 0) > t_restore,
+            timeout=5)
         handler._refresh_denylist(dfk.context())
         assert victim.name not in dfk.denylist
 

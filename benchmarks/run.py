@@ -1,13 +1,21 @@
 """Benchmark harness: one module per paper table/figure + roofline +
-training-plane recovery.  Prints ``name,us_per_call,derived`` CSV.
+training-plane recovery.  Prints ``name,us_per_call,derived`` CSV and
+writes one machine-readable ``BENCH_<suite>.json`` per suite (rows +
+parsed metrics: makespans, task/app success rates, normalized TTF, ...)
+so CI can archive the perf trajectory PR over PR.
 
     PYTHONPATH=src python -m benchmarks.run            # everything
     PYTHONPATH=src python -m benchmarks.run fig4 fig8  # a subset
+    BENCH_OUT=artifacts/ ...                           # JSON output dir
 """
 from __future__ import annotations
 
+import json
+import os
+import re
 import sys
 import time
+from pathlib import Path
 
 from benchmarks import (
     fig4_time_to_failure,
@@ -33,19 +41,69 @@ SUITES = {
     "train_recovery": train_recovery.run,
 }
 
+# derived fields look like "normalized_ttf=0.430±0.012" or "makespan=1.2";
+# capture the key and the leading float (the ±sem tail stays in the row)
+_METRIC_RE = re.compile(r"([A-Za-z_][\w.]*)=(-?\d+(?:\.\d+)?(?:e-?\d+)?)")
+
+
+def _parse_row(row: str) -> dict:
+    name, _, rest = row.partition(",")
+    us, _, derived = rest.partition(",")
+    try:
+        us_val = float(us)
+    except ValueError:
+        us_val = None
+    return {
+        "name": name,
+        "us_per_call": us_val,
+        "derived": derived,
+        "metrics": {k: float(v) for k, v in _METRIC_RE.findall(derived)},
+    }
+
+
+def write_suite_json(out_dir: str | Path, suite: str, rows: list[str], *,
+                     wall_seconds: float, error: str | None = None) -> Path:
+    """Persist one suite's results as ``BENCH_<suite>.json``.
+
+    Per-row metrics are parsed out of the derived field; a top-level
+    ``metrics`` map aggregates them as ``<row>.<key>`` so downstream
+    tooling can diff runs without re-parsing CSV.
+    """
+    parsed = [_parse_row(r) for r in rows]
+    payload = {
+        "suite": suite,
+        "wall_seconds": round(wall_seconds, 3),
+        "error": error,
+        "rows": parsed,
+        "metrics": {f"{p['name']}.{k}": v
+                    for p in parsed for k, v in p["metrics"].items()},
+    }
+    out = Path(out_dir)
+    out.mkdir(parents=True, exist_ok=True)
+    path = out / f"BENCH_{suite}.json"
+    path.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    return path
+
 
 def main() -> None:
     picks = [a for a in sys.argv[1:] if a in SUITES] or list(SUITES)
+    out_dir = os.environ.get("BENCH_OUT", ".")
     print("name,us_per_call,derived")
     for name in picks:
+        rows: list[str] = []
+        error: str | None = None
         t0 = time.time()
         try:
             for row in SUITES[name]():
                 print(row, flush=True)
+                rows.append(row)
         except Exception as e:  # noqa: BLE001 - one suite must not kill the run
-            print(f"{name}_ERROR,0.0,{type(e).__name__}:{e}", flush=True)
-        print(f"{name}_wall,{(time.time() - t0) * 1e6:.0f},suite_seconds="
-              f"{time.time() - t0:.1f}", flush=True)
+            error = f"{type(e).__name__}:{e}"
+            print(f"{name}_ERROR,0.0,{error}", flush=True)
+        wall = time.time() - t0
+        print(f"{name}_wall,{wall * 1e6:.0f},suite_seconds={wall:.1f}",
+              flush=True)
+        write_suite_json(out_dir, name, rows, wall_seconds=wall, error=error)
 
 
 if __name__ == "__main__":

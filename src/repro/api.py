@@ -35,6 +35,7 @@ Three ideas, one surface:
   times) and :func:`replicate` (race *n* copies, first ``validate``-d
   result wins), per Gupta et al.'s task-level resiliency primitives.
 """
+from repro.checkpoint.task_store import CheckpointPolicy, TaskStore, lineage_key
 from repro.core.failures import (
     DependencyError,
     FailureReport,
@@ -84,6 +85,8 @@ __all__ = [
     "DependencyError", "TaskCancelledError",
     # monitoring & proactive tunables
     "MonitoringDatabase", "ProactiveConfig", "ProactiveSentinel",
+    # lineage-aware checkpoint/restart plane
+    "TaskStore", "CheckpointPolicy", "lineage_key",
     # placement
     "Scheduler", "SCHEDULERS", "make_scheduler",
 ]

@@ -125,8 +125,17 @@ def load_checkpoint(path: str | Path, tree_like: Any, *,
         return arr
 
     leaves, treedef = _flatten(tree_like)
-    sh_leaves = (jax.tree.leaves(shardings) if shardings is not None
-                 else [None] * len(leaves))
+    if shardings is not None:
+        sh_leaves = jax.tree.leaves(shardings)
+        if len(sh_leaves) != len(leaves):
+            # a partial/mismatched shardings pytree would zip-truncate
+            # silently (list-shaped) or die deep in jax.tree.unflatten
+            raise ValueError(
+                f"shardings pytree has {len(sh_leaves)} leaves but "
+                f"checkpoint {path} expects {len(leaves)}; pass one "
+                f"sharding per restored leaf (or shardings=None)")
+    else:
+        sh_leaves = [None] * len(leaves)
     out = []
     for (key, like), sh in zip(leaves, sh_leaves):
         arr = get(key)
@@ -145,6 +154,7 @@ class CheckpointManager:
                  async_save: bool = False):
         self.directory = Path(directory)
         self.directory.mkdir(parents=True, exist_ok=True)
+        self._sweep_tmp()  # a crash mid-save leaves orphaned .tmp_step_* dirs
         self.keep = keep
         self.async_save = async_save
         self._pending: threading.Thread | None = None
@@ -196,10 +206,22 @@ class CheckpointManager:
             self._async_error = None
             raise err
 
+    def _sweep_tmp(self) -> None:
+        """Remove uncommitted ``.tmp_step_*`` dirs from interrupted saves.
+
+        Safe while a save is in flight: :func:`save_checkpoint` recreates
+        its tmp dir from scratch, and the manager serializes saves (every
+        ``save()`` waits for the previous async writer), so any tmp dir
+        seen here belongs to a crashed writer, not a live one.
+        """
+        for p in self.directory.glob(".tmp_step_*"):
+            shutil.rmtree(p, ignore_errors=True)
+
     def _retain(self) -> None:
         steps = self.steps()
         for s in steps[:-self.keep]:
             shutil.rmtree(self.directory / f"step_{s:08d}", ignore_errors=True)
+        self._sweep_tmp()
 
     def restore_latest(self, tree_like: Any, *, shardings: Any | None = None
                        ) -> tuple[Any, dict] | None:

@@ -128,6 +128,7 @@ class DataFlowKernel:
         cluster: Cluster,
         *,
         policy: Any = None,
+        checkpoint: Any = None,          # TaskStore | CheckpointPolicy | path
         retry_handler=None,              # deprecated: use policy=
         monitor=None,
         scheduler: Scheduler | None = None,
@@ -157,14 +158,25 @@ class DataFlowKernel:
         self.scheduler = scheduler or RoundRobinScheduler()
         # canonical resilience configuration: an ordered policy stack.  The
         # deprecated kwargs adapt into equivalent single-element stacks
-        # appended after any explicitly-passed policies.
+        # appended after any explicitly-passed policies; checkpoint= joins
+        # last so result validators ahead of it veto a commit.
+        ckpt_parts: tuple = ()
+        if checkpoint is not None:
+            from repro.checkpoint.task_store import as_checkpoint_policy
+            ckpt_parts = (as_checkpoint_policy(checkpoint),)
         self.policies = PolicyStack(
             normalize_policies(policy)
             + shim_legacy_kwargs(
                 retry_handler=retry_handler, proactive=proactive,
                 speculative_execution=speculative_execution,
-                straggler_factor=straggler_factor, warn=_warn_legacy),
+                straggler_factor=straggler_factor, warn=_warn_legacy)
+            + ckpt_parts,
             on_error=self._on_event_error)
+        # engine-level task-output store (None when not checkpointing):
+        # the lineage-aware memoization plane tests and tooling introspect
+        self.task_store = next(
+            (p.store for p in self.policies._checkpointers
+             if getattr(p, "store", None) is not None), None)
         # legacy introspection points: the adapted handler/sentinel (tests
         # and tooling read dfk.sentinel.decisions)
         self.retry_handler = retry_handler
@@ -231,6 +243,8 @@ class DataFlowKernel:
             "fast_fails": 0, "preemptions": 0, "drains": 0, "cancelled": 0,
             # replicate(n) racing copies
             "replicas": 0,
+            # lineage-aware checkpoint plane: tasks resolved from the store
+            "memo_hits": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -391,6 +405,19 @@ class DataFlowKernel:
         return stack
 
     def submit(self, td: TaskDef, args: tuple, kwargs: dict) -> AppFuture:
+        if self._shutting_down:
+            # PR-3 contract: shutdown resolves every pending future with
+            # RuntimeError — a post-shutdown submit must not hang either.
+            # The task is never registered (no _outstanding increment, no
+            # event on the stopped loop); its future resolves immediately.
+            rec = new_task_record(td, args, kwargs, default_retries=0,
+                                  now=self.clock.time())
+            rec.state = TaskState.FAILED
+            rec.exception = RuntimeError(
+                f"DataFlowKernel is shut down: cannot submit task "
+                f"{td.name!r}")
+            rec.future.set_exception(rec.exception)  # type: ignore[union-attr]
+            return rec.future  # type: ignore[return-value]
         # hierarchy resolution: an explicit options(workflow=...) pin wins,
         # else the thread's innermost active scope (None = engine root)
         wf = td.workflow if td.workflow is not None else Workflow.current()
@@ -415,28 +442,51 @@ class DataFlowKernel:
             self.stats["submitted"] += 1
             self._outstanding += 1
             pending = [f for f in deps if not f.done()]
-        if wf is not None:
-            wf._add(rec)
-        if self.monitor is not None:
-            scope = {"workflow": wf.path} if wf is not None else {}
-            self.monitor.record_task_event(
-                rec.task_id, "submitted", name=rec.name,
-                resources=rec.resources.asdict(), **scope)
-        if wf is not None and wf.cancelled:
-            # submissions into a cancelled scope resolve immediately
-            self.cancel_task(rec.task_id,
-                             reason=f"workflow {wf.path!r} is cancelled")
-            return rec.future  # type: ignore[return-value]
-        if rec.stack._submitters:
-            t0 = time.perf_counter()
-            rec.stack.on_submit(rec, self.context())
-            self.stats["wrath_overhead_s"] += time.perf_counter() - t0
-        if not pending:
-            if self._claim_ready(rec):
-                self.events.call_soon(self._maybe_dispatch, rec, name="dispatch")
-        else:
-            for f in pending:
-                f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
+        try:
+            if wf is not None:
+                wf._add(rec)
+            if self.monitor is not None:
+                scope = {"workflow": wf.path} if wf is not None else {}
+                self.monitor.record_task_event(
+                    rec.task_id, "submitted", name=rec.name,
+                    resources=rec.resources.asdict(), **scope)
+            if wf is not None and wf.cancelled:
+                # submissions into a cancelled scope resolve immediately
+                self.cancel_task(rec.task_id,
+                                 reason=f"workflow {wf.path!r} is cancelled")
+                return rec.future  # type: ignore[return-value]
+            if rec.stack._submitters:
+                t0 = time.perf_counter()
+                rec.stack.on_submit(rec, self.context())
+                self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+            if not pending:
+                if self._claim_ready(rec):
+                    self.events.call_soon(self._maybe_dispatch, rec,
+                                          name="dispatch")
+            else:
+                for f in pending:
+                    f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
+        except BaseException as sub_err:
+            # a submission that dies after registering must not leave a
+            # phantom outstanding task behind (wait_all would never return
+            # and a map() sweep would lose capacity forever)
+            with self._all_done:
+                if not getattr(rec, "_finished", False):
+                    self.tasks.pop(rec.task_id, None)
+                    self.stats["submitted"] -= 1
+                    self._outstanding -= 1
+                    if self._outstanding <= 0:
+                        self._all_done.notify_all()
+            # the record may already sit in a workflow scope's member list:
+            # resolve its future so Workflow.wait()/futures() can't hang on
+            # a task the engine disowned
+            if rec.future is not None and not rec.future.done():
+                rec.state = TaskState.FAILED
+                rec.exception = RuntimeError(
+                    f"submission of task {rec.task_id} ({rec.name}) "
+                    f"failed: {sub_err!r}")
+                rec.future.set_exception(rec.exception)
+            raise
         return rec.future  # type: ignore[return-value]
 
     def _notify_running(self, rec: TaskRecord) -> None:
@@ -522,7 +572,14 @@ class DataFlowKernel:
                             "stopped or virtual horizon exhausted)")
                 else:
                     gate.acquire()
-                fut = self.submit(td, args, dict(kwargs))
+                try:
+                    fut = self.submit(td, args, dict(kwargs))
+                except BaseException:
+                    # a failed submission must give its slot back — leaking
+                    # it would strand the rest of the sweep at cap-1 (and a
+                    # later failure would eventually deadlock the map)
+                    gate.release()
+                    raise
                 fut.add_done_callback(lambda _f, g=gate: g.release())
             else:
                 fut = self.submit(td, args, dict(kwargs))
@@ -564,7 +621,72 @@ class DataFlowKernel:
         # dependencies satisfied: materialize parent results into the args
         rec.args = _resolve(rec.args)
         rec.kwargs = _resolve(rec.kwargs)
+        # lineage-aware memoization: with a CheckpointPolicy in the stack
+        # and the args now embedding every parent's result, a committed
+        # result for this invocation hash resolves the future right here —
+        # the restart path that skips the completed frontier
+        stack = rec.stack if rec.stack is not None else self.policies
+        if (stack._checkpointers and rec.retry_count == 0
+                and not rec.cancel_requested
+                and self._try_memoized(rec, stack)):
+            return
         self._dispatch(rec)
+
+    def _try_memoized(self, rec: TaskRecord, stack: PolicyStack) -> bool:
+        """Probe the checkpoint stores for this record's lineage key.
+
+        A hit still runs the stack's result validators (the same gate a
+        fresh execution passes through); a cached result that fails
+        validation triggers **dependency-aware rollback** — the entry and
+        all its descendants are invalidated — and the task re-executes.
+
+        The store probe runs synchronously on the event-loop thread,
+        like every other dispatch-time policy hook.  For an on-disk
+        store this is local-file I/O (values cache in memory after the
+        first load); replaying a frontier of very large cached results
+        on a *real-clock* engine can delay heartbeat/straggler timers —
+        widen ``heartbeat_threshold`` there, or keep bulky results out
+        of the task store.  Moving hydration off-loop is future work.
+        """
+        t0 = time.perf_counter()
+        hit, value = stack.memo_lookup(rec, self.context())
+        self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+        if not hit:
+            return False
+        vexc = (stack.on_result(rec, value, self.context())
+                if stack._validators else None)
+        if vexc is not None:
+            removed = stack.memo_invalidate(rec, reason=str(vexc))
+            if self.monitor is not None:
+                self.monitor.record_task_event(
+                    rec.task_id, "memo_rollback", name=rec.name,
+                    error=type(vexc).__name__, invalidated=len(removed))
+            return False
+        # a hit reached via a *different* parent lineage (converging
+        # DAGs: two parents, same output value, one child key) must still
+        # register the new parent edges — commit is a value no-op here
+        # but unions parents, keeping rollback dependency-complete
+        stack.memo_commit(rec, value, self.context())
+        self._complete_memoized(rec, value)
+        return True
+
+    def _complete_memoized(self, rec: TaskRecord, value: Any) -> bool:
+        """Resolve a task from the checkpoint store without dispatching."""
+        with self._lock:
+            if self._done_first.get(rec.task_id):
+                return False
+            self._done_first[rec.task_id] = True
+            rec.state = TaskState.COMPLETED
+            rec.end_time = self.clock.time()
+            self.stats["completed"] += 1
+            self.stats["memo_hits"] += 1
+        if self.monitor is not None:
+            self.monitor.record_task_event(
+                rec.task_id, "memoized", name=rec.name,
+                key=(rec.lineage_key or "")[:12])
+        self._cancel_race_loser(rec, rec.task_id)
+        self._finish(rec, result=value)
+        return True
 
     def _dispatch(self, rec: TaskRecord) -> None:
         if self._done_first.get(rec.task_id) or rec.cancel_requested:
@@ -887,6 +1009,16 @@ class DataFlowKernel:
                     self.stats["retry_success"] += 1
                 self.stats["completed"] += 1
         if err is None:
+            # only the attempt that claimed _done_first reaches here:
+            # commit the winning value to the checkpoint stores (a losing
+            # racing copy's different result must never overwrite what the
+            # future actually resolved with)
+            primary = self.tasks.get(rec.task_id, rec)
+            stack = primary.stack if primary.stack is not None else self.policies
+            if stack._checkpointers and not rec.cancel_requested:
+                t0 = time.perf_counter()
+                stack.memo_commit(primary, result, self.context())
+                self.stats["wrath_overhead_s"] += time.perf_counter() - t0
             self._pending_terminal.pop(rec.task_id, None)
             self._cancel_race_loser(rec, rec.task_id)
             self._finish(rec, result=result)

@@ -73,6 +73,20 @@ class ResiliencePolicy:
         bad replicas).
     ``on_tick(ctx)``
         Periodic heartbeat on the engine's event loop.
+    ``memo_lookup(rec, ctx) -> (hit, value)``
+        Checkpoint hook, called at dispatch once dependencies resolved:
+        a ``(True, value)`` return short-circuits execution — the engine
+        resolves the future with ``value`` and never places the task.
+        Overridden by :class:`~repro.checkpoint.task_store.
+        CheckpointPolicy`.
+    ``memo_commit(rec, result, ctx)``
+        Persist a successful result.  Fired only for the attempt that
+        won the task (post duplicate-completion guard), never for a
+        discarded racing copy.
+    ``memo_invalidate(rec, reason) -> removed keys``
+        Dependency-aware rollback, fired when a memoized result fails
+        the stack's ``on_result`` validation: drop the cached entry and
+        its descendants so the lineage re-executes.
     """
 
     def bind(self, dfk: Any) -> None:
@@ -102,6 +116,15 @@ class ResiliencePolicy:
         return None
 
     def on_tick(self, ctx: SchedulingContext) -> None: ...
+
+    def memo_lookup(self, rec: Any, ctx: SchedulingContext) -> tuple[bool, Any]:
+        return (False, None)
+
+    def memo_commit(self, rec: Any, result: Any,
+                    ctx: SchedulingContext) -> None: ...
+
+    def memo_invalidate(self, rec: Any, reason: str = "") -> list[str]:
+        return []
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"<{type(self).__name__}>"
@@ -178,6 +201,11 @@ class PolicyStack(ResiliencePolicy):
             p for p in self.policies if type(p).on_result is not base.on_result)
         self._tickers = tuple(
             p for p in self.policies if type(p).on_tick is not base.on_tick)
+        self._checkpointers = tuple(
+            p for p in self.policies
+            if type(p).memo_lookup is not base.memo_lookup
+            or type(p).memo_commit is not base.memo_commit
+            or type(p).memo_invalidate is not base.memo_invalidate)
 
     # -- composition -----------------------------------------------------
     def __iter__(self):
@@ -279,6 +307,39 @@ class PolicyStack(ResiliencePolicy):
                 p.on_tick(ctx)
             except Exception as err:  # noqa: BLE001
                 self._report(p, "on_tick", err)
+
+    def memo_lookup(self, rec: Any, ctx: SchedulingContext) -> tuple[bool, Any]:
+        """First checkpoint hit wins; a raising store degrades to a miss
+        (memoization must never be able to wedge dispatch)."""
+        for p in self._checkpointers:
+            try:
+                hit, value = p.memo_lookup(rec, ctx)
+            except Exception as err:  # noqa: BLE001 - store bug => execute
+                self._report(p, "memo_lookup", err)
+                continue
+            if hit:
+                return True, value
+        return False, None
+
+    def memo_commit(self, rec: Any, result: Any,
+                    ctx: SchedulingContext) -> None:
+        """Commit fans out to every checkpoint store in the stack."""
+        for p in self._checkpointers:
+            try:
+                p.memo_commit(rec, result, ctx)
+            except Exception as err:  # noqa: BLE001 - a failed commit only
+                self._report(p, "memo_commit", err)  # costs a future memo hit
+
+    def memo_invalidate(self, rec: Any, reason: str = "") -> list[str]:
+        """Rollback fans out to *every* checkpoint store in the stack: an
+        invalid cached result must not survive anywhere."""
+        removed: list[str] = []
+        for p in self._checkpointers:
+            try:
+                removed.extend(p.memo_invalidate(rec, reason=reason))
+            except Exception as err:  # noqa: BLE001
+                self._report(p, "memo_invalidate", err)
+        return removed
 
     # -- the full failure-routing protocol -------------------------------
     def decide(self, rec: Any, report: FailureReport,

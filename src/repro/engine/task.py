@@ -124,6 +124,10 @@ class TaskRecord:
     pool_default: str | None = None
     # racing copies requested by replicate(n) (launched after placement)
     replicas: int = 0
+    # invocation hash (template + resolved args, which embed every parent's
+    # result) computed at dispatch when a CheckpointPolicy is in the stack;
+    # the key of this task's entry in the lineage-aware TaskStore
+    lineage_key: str | None = None
     # engine callback fired by the worker on the RUNNING transition (only
     # set when some policy in the stack overrides on_running)
     on_running: Any = field(default=None, repr=False)

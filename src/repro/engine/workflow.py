@@ -51,7 +51,8 @@ class Workflow:
     def __init__(self, name: str, *, dfk: "DataFlowKernel | None" = None,
                  parent: "Workflow | None" = None, pool: str | None = None,
                  retries: int | None = None, node: str | None = None,
-                 policy: Any = None, propagate: str = "none"):
+                 policy: Any = None, propagate: str = "none",
+                 checkpoint: Any = None):
         if propagate not in PROPAGATE_MODES:
             raise ValueError(
                 f"propagate must be one of {PROPAGATE_MODES}, got {propagate!r}")
@@ -74,6 +75,12 @@ class Workflow:
         self.retries = retries
         self.node = node
         self.policies: tuple[ResiliencePolicy, ...] = normalize_policies(policy)
+        if checkpoint is not None:
+            # scope-level checkpoint/restart: member tasks memoize into the
+            # given TaskStore (path / store / policy), joining the scope's
+            # policy chain after any explicit policies
+            from repro.checkpoint.task_store import as_checkpoint_policy
+            self.policies = self.policies + (as_checkpoint_policy(checkpoint),)
         self.propagate = propagate
         self.children: list["Workflow"] = []
         self._records: list[TaskRecord] = []

@@ -204,6 +204,15 @@ class ScenarioResult:
     #: per-task outcome: ("ok", result) or ("error", exception type name)
     outcomes: dict[str, tuple[str, Any]]
     events_executed: int = 0
+    # -- checkpoint/restart bookkeeping (engine_crash scenarios) ----------
+    #: number of engine crash/restart cycles that occurred
+    crashes: int = 0
+    #: TaskStore size (committed results) snapshotted at each crash
+    committed_at_crash: list[int] = field(default_factory=list)
+    #: tasks the *final* engine incarnation actually executed (dispatched
+    #: to a worker at least once) — after a restart this is the incomplete
+    #: frontier, everything else resolves from the store
+    reexecuted: int = 0
 
     @property
     def ok(self) -> bool:
@@ -241,27 +250,55 @@ def run_scenario(scenario: Scenario, *,
                  policy_factory: Callable[[], Any] | None = None,
                  default_retries: int = 3,
                  heartbeat_period: float = 0.1,
-                 heartbeat_threshold: float = 5.0) -> ScenarioResult:
+                 heartbeat_threshold: float = 5.0,
+                 task_store: Any = None) -> ScenarioResult:
     """Execute one scenario on a fresh virtual-clock engine.
 
     ``policy_factory`` builds the resilience stack per run (policies bind
     to one engine, so a *factory*, not an instance); default is WRATH's
     taxonomy-driven hierarchical retry.
+
+    ``engine_crash`` faults tear the whole engine down and rebuild it
+    against the same lineage-aware :class:`~repro.checkpoint.task_store.
+    TaskStore` (``task_store=``; a fresh in-memory store is created when
+    the scenario crashes and none was given), then replay the workflow
+    script: already-committed tasks resolve from the store by
+    memoization, only the incomplete frontier re-executes.  Environment
+    state survives the crash (dead hardware stays dead, silent
+    monitoring agents stay silent, scope cancellations are re-issued);
+    engine-private state (denylist, drain sets, in-flight attempts) is
+    lost, exactly as a real restart loses it.
     """
     clock = VirtualClock()
     monitor = MonitoringDatabase(clock=clock, keep_event_log=True)
-    cluster = _build_cluster(scenario)
-    policy = policy_factory() if policy_factory is not None else WrathPolicy()
-    dfk = DataFlowKernel(
-        cluster, monitor=monitor, clock=clock, policy=policy,
-        executor_factory=SimExecutor.factory(scenario.durations),
-        default_retries=default_retries, heartbeat_period=heartbeat_period,
-        heartbeat_threshold=heartbeat_threshold)
-    dfk.start()
-    wfs = {name: dfk.workflow(name, propagate=mode)
-           for name, mode in scenario.workflows.items()}
+    store = task_store
+    if store is None and any(f.kind == "engine_crash" for f in scenario.faults):
+        from repro.checkpoint.task_store import TaskStore
+        store = TaskStore()
+
+    n_tasks = len(scenario.tasks)
     futures: dict[int, Any] = {}
     cancel_times: dict[str, float] = {}
+    fired: set[int] = set()          # indices of faults already applied
+    crash = {"pending": False}
+    state: dict[str, Any] = {}       # current engine incarnation
+
+    def build_engine() -> None:
+        cluster = _build_cluster(scenario)
+        policy = (policy_factory() if policy_factory is not None
+                  else WrathPolicy())
+        dfk = DataFlowKernel(
+            cluster, monitor=monitor, clock=clock, policy=policy,
+            checkpoint=store,
+            executor_factory=SimExecutor.factory(scenario.durations),
+            default_retries=default_retries,
+            heartbeat_period=heartbeat_period,
+            heartbeat_threshold=heartbeat_threshold)
+        dfk.start()
+        state["dfk"] = dfk
+        state["cluster"] = cluster
+        state["wfs"] = {name: dfk.workflow(name, propagate=mode)
+                        for name, mode in scenario.workflows.items()}
 
     def submit(i: int) -> None:
         spec = scenario.tasks[i]
@@ -272,13 +309,20 @@ def run_scenario(scenario: Scenario, *,
         td = TaskDef(_make_fn(i, spec.fail), spec.name,
                      ResourceSpec(packages=packages, **res),
                      spec.max_retries,
-                     workflow=wfs.get(spec.workflow))
+                     workflow=state["wfs"].get(spec.workflow))
         args = tuple(futures[j] for j in spec.depends_on)
-        futures[i] = dfk.submit(td, args, {})
+        futures[i] = state["dfk"].submit(td, args, {})
 
-    def apply_fault(fault: Any) -> None:
+    def apply_fault(idx: int, fault: Any) -> None:
+        fired.add(idx)
         monitor.record_system_event(
             f"fault_{fault.kind}", node=fault.node, workflow=fault.workflow)
+        if fault.kind == "engine_crash":
+            # flagged only: the teardown/rebuild happens *outside* the
+            # event loop (run_until checks the predicate between events)
+            crash["pending"] = True
+            return
+        dfk, cluster, wfs = state["dfk"], state["cluster"], state["wfs"]
         ex = dfk.executors["sim"]
         if fault.kind == "node_down":
             node = cluster.find_node(fault.node)
@@ -309,25 +353,88 @@ def run_scenario(scenario: Scenario, *,
                 cancel_times[fault.workflow] = clock.time()
                 wf.cancel("scripted cancellation")
 
+    build_engine()
     t0 = clock.now()
     for i, spec in enumerate(scenario.tasks):
-        dfk.events.call_at(t0 + spec.at, submit, i, name="scenario-submit")
-    for fault in scenario.faults:
-        dfk.events.call_at(t0 + fault.at, apply_fault, fault,
-                           name=f"fault:{fault.kind}")
-
-    n_tasks = len(scenario.tasks)
+        state["dfk"].events.call_at(t0 + spec.at, submit, i,
+                                    name="scenario-submit")
+    for idx, fault in enumerate(scenario.faults):
+        state["dfk"].events.call_at(t0 + fault.at, apply_fault, idx, fault,
+                                    name=f"fault:{fault.kind}")
 
     def all_done() -> bool:
         return (len(futures) == n_tasks
                 and all(f.done() for f in futures.values()))
 
-    executed = dfk.events.run_until(all_done,
-                                    deadline=t0 + scenario.horizon)
+    def restart(generation: int) -> None:
+        """Tear the crashed engine down and bring a new one up on the
+        same store/monitor/clock, replaying the workflow script."""
+        old_dfk, old_cluster = state["dfk"], state["cluster"]
+        dead = [n.name for pool in old_cluster.pools.values()
+                for n in pool.nodes if not n.healthy]
+        hb_paused = [name for name, mgr
+                     in old_dfk.executors["sim"].managers.items()
+                     if mgr._hb_paused]
+        cancelled = {name: wf.cancel_reason
+                     for name, wf in state["wfs"].items() if wf.cancelled}
+        already_submitted = sorted(futures)
+        old_dfk.shutdown()
+        monitor.record_system_event("engine_restart", generation=generation)
+        build_engine()
+        dfk, cluster = state["dfk"], state["cluster"]
+        ex = dfk.executors["sim"]
+        # environment state survives an engine restart: dead hardware
+        # stays dead until a scripted node_up revives it, and a silent
+        # monitoring agent stays silent until a scripted hb_resume
+        for name in dead:
+            node = cluster.find_node(name)
+            if node is not None:
+                node.healthy = False
+            ex.fail_node(name)
+        for name in hb_paused:
+            mgr = ex.managers.get(name)
+            if mgr is not None:
+                mgr.pause_heartbeats()
+        # scope cancellation is coordinator state the replayed script
+        # re-issues; members resubmitted below auto-cancel at submit
+        for name, reason in cancelled.items():
+            wf = state["wfs"].get(name)
+            if wf is not None:
+                wf.cancel(reason or "cancellation restored after restart")
+        # replay: resubmit everything the script had already submitted
+        # (committed lineage resolves from the store without dispatch) ...
+        for i in already_submitted:
+            submit(i)
+        # ... and re-schedule arrivals/faults that had not happened yet
+        now = clock.now()
+        for i, spec in enumerate(scenario.tasks):
+            if i not in futures:
+                dfk.events.call_at(max(t0 + spec.at, now), submit, i,
+                                   name="scenario-submit")
+        for idx, fault in enumerate(scenario.faults):
+            if idx not in fired:
+                dfk.events.call_at(max(t0 + fault.at, now), apply_fault,
+                                   idx, fault, name=f"fault:{fault.kind}")
 
+    executed = 0
+    crashes = 0
+    committed_at_crash: list[int] = []
+    while True:
+        executed += state["dfk"].events.run_until(
+            lambda: all_done() or crash["pending"],
+            deadline=t0 + scenario.horizon)
+        if not crash["pending"]:
+            break
+        crash["pending"] = False
+        crashes += 1
+        committed_at_crash.append(len(store) if store is not None else 0)
+        restart(crashes)
+
+    dfk, wfs = state["dfk"], state["wfs"]
     violations = _check_invariants(scenario, dfk, futures, wfs, cancel_times)
     trace = build_trace(monitor)
     stats = dict(dfk.stats)
+    reexecuted = sum(1 for rec in dfk.tasks.values() if rec.attempts)
     outcomes: dict[str, tuple[str, Any]] = {}
     for i, fut in futures.items():
         name = scenario.tasks[i].name
@@ -341,7 +448,10 @@ def run_scenario(scenario: Scenario, *,
     dfk.shutdown()
     return ScenarioResult(seed=scenario.seed, scenario=scenario, trace=trace,
                           stats=stats, violations=violations,
-                          outcomes=outcomes, events_executed=executed)
+                          outcomes=outcomes, events_executed=executed,
+                          crashes=crashes,
+                          committed_at_crash=committed_at_crash,
+                          reexecuted=reexecuted)
 
 
 def _check_invariants(scenario: Scenario, dfk: DataFlowKernel,

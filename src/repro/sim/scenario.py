@@ -28,7 +28,8 @@ __all__ = ["Fault", "NodeSpec", "SimTaskSpec", "Scenario", "FAULT_KINDS",
 
 #: scripted fault-event kinds the harness knows how to apply
 FAULT_KINDS = ("node_down", "node_up", "hb_pause", "hb_resume",
-               "worker_kill", "drain", "undrain", "cancel_workflow")
+               "worker_kill", "drain", "undrain", "cancel_workflow",
+               "engine_crash")
 
 #: injectable per-task failure behaviours (Table III, both flavours)
 TASK_FAILURE_KINDS = tuple(FN_REPLACEMENT) + tuple(SPEC_MODIFICATION)
@@ -36,7 +37,14 @@ TASK_FAILURE_KINDS = tuple(FN_REPLACEMENT) + tuple(SPEC_MODIFICATION)
 
 @dataclass(frozen=True)
 class Fault:
-    """One timed environment/runtime fault."""
+    """One timed environment/runtime fault.
+
+    ``engine_crash`` is engine-scoped (no node/workflow target): the
+    harness tears the whole :class:`~repro.engine.dfk.DataFlowKernel`
+    down mid-run and rebuilds it against the same lineage-aware
+    :class:`~repro.checkpoint.task_store.TaskStore`, replaying the
+    workflow script — the checkpoint/restart plane's chaos scenario.
+    """
 
     at: float                      # virtual seconds from scenario start
     kind: str                      # one of FAULT_KINDS
@@ -127,6 +135,7 @@ class Scenario:
                task_failure_rate: float = 0.3,
                fault_rate: float = 0.5,
                with_workflows: bool = True,
+               crash_rate: float = 0.2,
                horizon: float = 120.0) -> "Scenario":
         """Sample a chaos scenario; every choice flows from the seed.
 
@@ -207,6 +216,12 @@ class Scenario:
         if wf_name is not None and rng.random() < 0.5:
             faults.append(Fault(at=round(rng.uniform(0.1, horizon / 3), 6),
                                 kind="cancel_workflow", workflow=wf_name))
+        if rng.random() < crash_rate:
+            # whole-engine crash/restart: the harness rebuilds the DFK
+            # against the same TaskStore and replays the script — only the
+            # incomplete frontier should re-execute
+            faults.append(Fault(at=round(rng.uniform(0.5, horizon / 3), 6),
+                                kind="engine_crash"))
         faults.sort(key=lambda f: (f.at, f.kind, f.node or "", f.workflow or ""))
         return Scenario(seed=seed, nodes=nodes, tasks=tasks, faults=faults,
                         horizon=horizon, workflows=workflows)

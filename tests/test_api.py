@@ -394,6 +394,70 @@ def test_shutdown_cancels_pending_futures_with_runtime_error():
         assert "shut down" in str(err)
 
 
+def test_submit_after_shutdown_resolves_immediately_instead_of_hanging():
+    """Regression: a post-shutdown submit used to increment _outstanding,
+    schedule onto the stopped event loop, and return a future whose
+    result() blocked forever."""
+    dfk = DataFlowKernel(Cluster.homogeneous(1, workers_per_node=1))
+    with dfk:
+        assert dfk.submit(add_one, (1,), {}).result(timeout=10) == 2
+        before = dict(dfk.stats)
+    fut = dfk.submit(add_one, (1,), {})
+    err = fut.exception(timeout=1)        # resolved, never hung
+    assert isinstance(err, RuntimeError)
+    assert "shut down" in str(err)
+    # the dead engine's books are untouched: nothing outstanding, nothing
+    # counted as submitted
+    assert dfk.stats["submitted"] == before["submitted"]
+    assert dfk._outstanding == 0
+    # and wait_all still returns immediately
+    assert dfk.wait_all(timeout=1)
+
+
+def test_map_backpressure_releases_slot_when_submit_raises():
+    """Regression: a submission failure after gate.acquire() leaked the
+    backpressure slot, deadlocking the rest of the sweep at cap-1."""
+    class ExplodesOnBind(ResiliencePolicy):
+        def bind(self, dfk):
+            raise RuntimeError("bind exploded")
+
+    with SimHarness(SimCluster.homogeneous(1, workers_per_node=1),
+                    durations=_napper_durations) as h:
+        bad = add_one.options(policy=ExplodesOnBind())
+        with pytest.raises(RuntimeError, match="bind exploded"):
+            h.dfk.map(bad, [(i,) for i in range(4)], max_outstanding=1)
+        # every acquired slot was released and no phantom outstanding task
+        # remains: a full-width healthy sweep through the same cap runs dry
+        futs = h.dfk.map(add_one, [(i,) for i in range(4)],
+                         max_outstanding=1)
+        assert [h.result(f) for f in futs] == [1, 2, 3, 4]
+        assert h.dfk.wait_all(timeout=10)
+
+
+def test_failed_submission_rolls_back_books_and_resolves_scope_future(monkeypatch):
+    """A submission that dies after registering must neither strand
+    wait_all (phantom outstanding) nor hang Workflow.wait() on a member
+    future the engine disowned."""
+    with SimHarness(SimCluster.homogeneous(1)) as h:
+        with h.dfk.workflow("w") as wf:
+            ok_fut = add_one(1)
+
+            def boom(*a, **k):
+                raise OSError("monitor down")
+
+            monkeypatch.setattr(h.monitor, "record_task_event", boom)
+            with pytest.raises(OSError, match="monitor down"):
+                add_one(2)
+            monkeypatch.undo()
+        assert wf.wait(timeout=10)            # scope must not hang
+        assert h.result(ok_fut) == 2
+        dead = [f for f in wf.futures() if f.exception(timeout=0) is not None]
+        assert len(dead) == 1
+        assert "submission of task" in str(dead[0].exception(timeout=0))
+        assert h.dfk.wait_all(timeout=10)
+        assert h.dfk._outstanding == 0
+
+
 def test_per_call_policy_is_bound_to_engine():
     """options(policy=ProactivePolicy()) must behave like the engine-level
     spelling: the sentinel binds and predictive fast-fail fires."""

@@ -104,6 +104,36 @@ def test_async_save_error_surfaces_on_next_save(tmp_path, tree, monkeypatch):
     assert mgr.steps() == [3]
 
 
+def test_stale_tmp_dirs_swept_on_init_and_retain(tmp_path, tree):
+    """Regression: a crash mid-save left ``.tmp_step_*`` dirs that
+    ``_retain()`` never removed, so they survived forever."""
+    stale = tmp_path / ".tmp_step_00000007"
+    stale.mkdir()
+    (stale / "shard_00000.npz").write_bytes(b"half-written")
+    mgr = CheckpointManager(tmp_path, keep=2)
+    assert not stale.exists()             # swept at open
+    # ... and a stale dir appearing later is swept by the retention pass
+    stale2 = tmp_path / ".tmp_step_00000008"
+    stale2.mkdir()
+    mgr.save(1, tree)
+    assert not stale2.exists()
+    assert mgr.steps() == [1]
+
+
+def test_load_checkpoint_rejects_mismatched_shardings_pytree(tmp_path, tree):
+    """Regression: a partial shardings pytree either zip-truncated
+    silently or died deep inside jax.tree.unflatten."""
+    save_checkpoint(tmp_path, 2, tree)
+    path = tmp_path / "step_00000002"
+    # placeholder leaves: validation fires before any device_put (and
+    # note None would vanish — jax treats it as an empty subtree)
+    with pytest.raises(ValueError, match=str(path)):
+        load_checkpoint(path, tree, shardings=["sh"])
+    n = len(jax.tree.leaves(tree))
+    with pytest.raises(ValueError, match=f"{n + 1} leaves"):
+        load_checkpoint(path, tree, shardings=["sh"] * (n + 1))
+
+
 def test_overwrite_same_step(tmp_path, tree):
     save_checkpoint(tmp_path, 3, tree)
     t2 = {"params": {"w": tree["params"]["w"] + 1, "b": tree["params"]["b"]},

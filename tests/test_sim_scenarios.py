@@ -6,6 +6,8 @@ the seed space is explored adaptively, otherwise a fixed seeded sweep
 runs — either way the failing seed is printed and reproduces the run
 exactly (``run_scenario(Scenario.random(seed))``).
 """
+import json
+
 import pytest
 
 from repro.engine.events import EventLoop
@@ -214,6 +216,96 @@ def test_cancelled_scope_stays_cancelled_under_chaos():
     # submitted after the scope died
     assert all(kind == "error" for kind, _ in result.outcomes.values()), \
         result.outcomes
+
+
+# --------------------------------------------------------------------- #
+# engine crash/restart: the lineage-aware checkpoint plane under chaos
+# --------------------------------------------------------------------- #
+def _crash_dag(crash_at=None):
+    """A linear 8-task DAG, one arrival per 0.5s; optionally crash mid-run."""
+    tasks = [SimTaskSpec(at=i * 0.5, name=f"t{i:03d}", duration=0.3,
+                         depends_on=(i - 1,) if i else ())
+             for i in range(8)]
+    faults = ([Fault(at=crash_at, kind="engine_crash")]
+              if crash_at is not None else [])
+    return Scenario(seed=7, tasks=tasks, faults=faults, horizon=60.0)
+
+
+def _outcome_bytes(result):
+    return json.dumps(result.outcomes, sort_keys=True, default=repr).encode()
+
+
+def test_engine_crash_reexecutes_only_the_incomplete_frontier():
+    """Acceptance property: after a mid-campaign crash the rebuilt engine
+    re-executes exactly the tasks without a committed result, and the
+    final results match the crash-free run byte for byte."""
+    crashed = run_scenario(_crash_dag(crash_at=2.2))
+    clean = run_scenario(_crash_dag())
+    assert crashed.ok, crashed.violations
+    assert crashed.crashes == 1
+    committed = crashed.committed_at_crash[0]
+    assert 0 < committed < 8              # the crash landed mid-DAG
+    assert crashed.stats["memo_hits"] == committed
+    assert crashed.reexecuted == 8 - committed
+    assert _outcome_bytes(crashed) == _outcome_bytes(clean)
+
+
+def test_engine_crash_trace_is_seed_deterministic():
+    first = run_scenario(_crash_dag(crash_at=2.2))
+    second = run_scenario(_crash_dag(crash_at=2.2))
+    assert first.trace == second.trace
+    assert "engine_restart" in first.trace
+    assert "memoized" in first.trace
+
+
+def test_engine_crash_with_injected_failures_keeps_failures_uncommitted():
+    """Destined-to-fail tasks are never memoized: they re-execute after
+    the restart and fail identically, while healthy committed siblings
+    resolve from the store."""
+    tasks = [SimTaskSpec(at=0.0, name="ok0", duration=0.2),
+             SimTaskSpec(at=0.1, name="doomed", duration=0.2,
+                         fail="zero_division", max_retries=0),
+             SimTaskSpec(at=0.2, name="ok1", duration=0.2),
+             SimTaskSpec(at=5.0, name="late", duration=0.2)]
+    scenario = Scenario(seed=3, tasks=tasks,
+                        faults=[Fault(at=1.0, kind="engine_crash")],
+                        horizon=60.0)
+    result = run_scenario(scenario)
+    assert result.ok, result.violations
+    assert result.outcomes["doomed"][0] == "error"
+    assert result.outcomes["ok0"] == ("ok", 0)
+    assert result.outcomes["late"] == ("ok", 3)
+    # ok0/ok1 committed pre-crash -> memo hits; doomed + late re-executed
+    assert result.committed_at_crash == [2]
+    assert result.stats["memo_hits"] == 2
+
+
+def test_engine_crash_preserves_heartbeat_silence():
+    """Heartbeat silence is *environment* state: a paused monitoring
+    agent must stay paused across the engine restart, so the rebuilt
+    engine still detects the loss instead of the fault healing itself."""
+    scenario = Scenario(
+        seed=5,
+        nodes=[NodeSpec("n0", workers=1), NodeSpec("n1", workers=1)],
+        # the second arrival keeps the run alive past the staleness
+        # window (last beat t=1 + 0.5*5 threshold -> loss check at t=4)
+        tasks=[SimTaskSpec(at=3.0, name="late", duration=0.2),
+               SimTaskSpec(at=6.0, name="later", duration=0.2)],
+        faults=[Fault(at=1.0, kind="hb_pause", node="n1"),
+                Fault(at=2.0, kind="engine_crash")],
+        horizon=60.0)
+    result = run_scenario(scenario, heartbeat_period=0.5)
+    assert result.ok, result.violations
+    assert result.crashes == 1
+    assert "heartbeat_lost" in result.trace   # detected *after* the restart
+
+
+def test_random_campaign_samples_engine_crashes_and_invariants_hold():
+    report = campaign(40, base_seed=300, determinism_checks=2)
+    assert report.ok, report.summary()
+    crashed = [r for r in report.results if r.crashes]
+    assert crashed                        # the sampler exercises the path
+    assert any(r.stats["memo_hits"] for r in crashed)
 
 
 # --------------------------------------------------------------------- #

@@ -1,0 +1,403 @@
+"""Lineage-aware checkpoint/restart plane: TaskStore, invocation hashes,
+engine memoization across restarts, and dependency-aware rollback."""
+import json
+import pickle
+
+import pytest
+
+from repro.api import ResiliencePolicy, task
+from repro.checkpoint.task_store import (
+    CheckpointPolicy,
+    TaskStore,
+    as_checkpoint_policy,
+    hash_value,
+    lineage_key,
+)
+from repro.sim import SimCluster, SimHarness
+
+# task templates are module-level so every engine incarnation sees the
+# same template names — the restart contract
+CALLS: list = []
+
+
+def _reset():
+    CALLS.clear()
+
+
+@task
+def inc(x):
+    CALLS.append(("inc", x))
+    return x + 1
+
+
+@task
+def mul10(x):
+    CALLS.append(("mul10", x))
+    return x * 10
+
+
+class _Rec:
+    """Minimal record stand-in for hashing tests."""
+
+    def __init__(self, name, args=(), kwargs=None, fn=None):
+        self.name = name
+        self.args = args
+        self.kwargs = kwargs or {}
+        self.fn = fn
+
+
+# --------------------------------------------------------------------- #
+# invocation hashing
+# --------------------------------------------------------------------- #
+def test_lineage_key_is_deterministic_and_arg_sensitive():
+    assert lineage_key(_Rec("f", (1, "a"))) == lineage_key(_Rec("f", (1, "a")))
+    assert lineage_key(_Rec("f", (1,))) != lineage_key(_Rec("f", (2,)))
+    assert lineage_key(_Rec("f", (1,))) != lineage_key(_Rec("g", (1,)))
+    # kwargs are order-insensitive; positional/keyword stay distinct
+    assert (lineage_key(_Rec("f", (), {"a": 1, "b": 2}))
+            == lineage_key(_Rec("f", (), {"b": 2, "a": 1})))
+    assert lineage_key(_Rec("f", (1,))) != lineage_key(_Rec("f", (), {"x": 1}))
+
+
+def test_lineage_key_is_not_confused_by_adjacent_value_boundaries():
+    """Regression: without length-prefixing, adjacent variable-length
+    elements could collide and alias two different invocations."""
+    assert (lineage_key(_Rec("f", ("aS", "b")))
+            != lineage_key(_Rec("f", ("a", "Sb"))))
+    assert (lineage_key(_Rec("f", (b"aY", b"b")))
+            != lineage_key(_Rec("f", (b"a", b"Yb"))))
+    assert (lineage_key(_Rec("f", ("ab",)))
+            != lineage_key(_Rec("f", ("a", "b"))))
+
+
+def test_lineage_key_covers_the_function_implementation():
+    """A persistent store must not serve results computed by an older
+    implementation: changing the task's code changes its keys, and two
+    different functions sharing a name never alias."""
+    def v1(x):
+        return x + 1
+
+    def v2(x):
+        return x + 2
+
+    def v1_again(x):
+        return x + 1
+
+    assert (lineage_key(_Rec("f", (1,), fn=v1))
+            != lineage_key(_Rec("f", (1,), fn=v2)))
+    assert (lineage_key(_Rec("f", (1,), fn=v1))
+            == lineage_key(_Rec("f", (1,), fn=v1_again)))
+
+
+def test_hash_value_distinguishes_types_and_handles_arrays():
+    import numpy as np
+
+    assert hash_value(1) != hash_value(1.0)
+    assert hash_value(True) != hash_value(1)
+    assert hash_value("1") != hash_value(1)
+    a = np.arange(4, dtype=np.int32)
+    assert hash_value(a) == hash_value(np.arange(4, dtype=np.int32))
+    assert hash_value(a) != hash_value(a.astype(np.int64))
+    assert hash_value(a) != hash_value(a.reshape(2, 2))
+
+
+# --------------------------------------------------------------------- #
+# TaskStore core
+# --------------------------------------------------------------------- #
+K = {name: hash_value(name)                 # store keys are sha256 digests
+     for name in ("k0", "parent", "child", "a", "b", "c", "d", "e")}
+
+
+def test_store_commit_lookup_roundtrip_memory_and_disk(tmp_path):
+    for store in (TaskStore(), TaskStore(tmp_path / "s")):
+        assert store.lookup(K["k0"]) == (False, None)
+        store.commit(K["k0"], {"v": [1, 2]}, task_name="f")
+        assert K["k0"] in store and len(store) == 1
+        assert store.lookup(K["k0"]) == (True, {"v": [1, 2]})
+    with pytest.raises(ValueError, match="sha256"):
+        store.commit("not-a-digest", 1)
+
+
+def test_store_survives_reopen(tmp_path):
+    TaskStore(tmp_path).commit(K["k0"], 42, task_name="f",
+                               parents=[K["parent"]])
+    reopened = TaskStore(tmp_path)
+    assert reopened.lookup(K["k0"]) == (True, 42)
+    assert reopened.entry(K["k0"])["parents"] == [K["parent"]]
+
+
+def test_store_sweeps_interrupted_commits(tmp_path):
+    store = TaskStore(tmp_path)
+    store.commit(K["k0"], 1)
+    # a crash between the value write and the meta write leaves an orphan
+    (tmp_path / f"{K['a']}.pkl").write_bytes(pickle.dumps(99))
+    (tmp_path / f".tmp-{K['b']}.pkl").write_bytes(b"junk")
+    # ... and a meta without its value
+    (tmp_path / f"{K['c']}.json").write_text(json.dumps({"value_hash": "x"}))
+    reopened = TaskStore(tmp_path)
+    assert reopened.keys() == [K["k0"]]
+    assert not (tmp_path / f"{K['a']}.pkl").exists()
+    assert not (tmp_path / f".tmp-{K['b']}.pkl").exists()
+    assert not (tmp_path / f"{K['c']}.json").exists()
+
+
+def test_open_never_touches_foreign_files(tmp_path):
+    """The sweep is scoped to sha256-keyed names: a store pointed at a
+    directory holding unrelated user files must not delete them."""
+    (tmp_path / "analysis.json").write_text("{}")
+    (tmp_path / "model.pkl").write_bytes(pickle.dumps({"w": 1}))
+    (tmp_path / ".tmp-notes.txt").write_text("mine")
+    store = TaskStore(tmp_path)
+    store.commit(K["k0"], 7)
+    reopened = TaskStore(tmp_path)
+    assert reopened.lookup(K["k0"]) == (True, 7)
+    assert (tmp_path / "analysis.json").exists()
+    assert (tmp_path / "model.pkl").exists()
+    assert (tmp_path / ".tmp-notes.txt").exists()
+
+
+def test_store_corrupt_value_is_a_miss_and_rolls_back_descendants(tmp_path):
+    store = TaskStore(tmp_path)
+    store.commit(K["parent"], 1)
+    store.commit(K["child"], 2, parents=[K["parent"]])
+    (tmp_path / f"{K['parent']}.pkl").write_bytes(b"not a pickle")
+    reopened = TaskStore(tmp_path)
+    assert reopened.lookup(K["parent"]) == (False, None)
+    assert K["child"] not in reopened     # stale child cannot outlive it
+
+
+def test_invalidate_descendants_walks_the_lineage_dag():
+    store = TaskStore()
+    store.commit(K["a"], 1)
+    store.commit(K["b"], 2, parents=[K["a"]])
+    store.commit(K["c"], 3, parents=[K["b"]])
+    store.commit(K["d"], 4, parents=[K["a"]])
+    store.commit(K["e"], 5)               # unrelated lineage
+    removed = store.invalidate(K["a"], descendants=True)
+    assert sorted(removed) == sorted([K["a"], K["b"], K["c"], K["d"]])
+    assert store.keys() == [K["e"]]
+
+
+def test_converging_lineages_union_parent_links(tmp_path):
+    """Re-committing the same value via a different parent must link the
+    new parent edge, or rollback misses descendants."""
+    store = TaskStore(tmp_path)
+    store.commit(K["child"], 20, parents=[K["a"]])
+    store.commit(K["child"], 20, parents=[K["b"]])
+    assert store.entry(K["child"])["parents"] == sorted([K["a"], K["b"]])
+    store.commit(K["b"], 2)
+    assert K["child"] in store.invalidate(K["b"], descendants=True)
+    # the merged links also survive a reopen
+    store2 = TaskStore(tmp_path)
+    store2.commit(K["child"], 20, parents=[K["a"]])
+    store2.commit(K["child"], 20, parents=[K["b"]])
+    assert TaskStore(tmp_path).entry(K["child"])["parents"] == \
+        sorted([K["a"], K["b"]])
+
+
+def test_as_checkpoint_policy_coercions(tmp_path):
+    store = TaskStore()
+    assert as_checkpoint_policy(store).store is store
+    pol = CheckpointPolicy(store)
+    assert as_checkpoint_policy(pol) is pol
+    assert as_checkpoint_policy(True).store.directory is None
+    assert as_checkpoint_policy(tmp_path / "d").store.directory == tmp_path / "d"
+    with pytest.raises(TypeError, match="checkpoint="):
+        as_checkpoint_policy(42)
+
+
+# --------------------------------------------------------------------- #
+# engine memoization: crash-resumable workflows
+# --------------------------------------------------------------------- #
+def test_restarted_engine_resumes_from_completed_frontier():
+    """The tentpole property: a fresh engine on the same store resolves
+    previously-committed lineage without dispatching a single task."""
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        out = mul10(inc(1))
+        assert h.result(out) == 20
+    assert CALLS == [("inc", 1), ("mul10", 2)]
+    assert len(store) == 2
+
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        out = mul10(inc(1))
+        assert h.result(out) == 20
+        assert h.dfk.stats["memo_hits"] == 2
+        assert h.dfk.task_store is store
+    assert CALLS == []                    # nothing re-executed
+
+
+def test_memoization_misses_when_an_ancestor_arg_changes():
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        assert h.result(mul10(inc(1))) == 20
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        # changed root arg -> new lineage keys all the way down
+        assert h.result(mul10(inc(2))) == 30
+        assert h.dfk.stats["memo_hits"] == 0
+    assert CALLS == [("inc", 2), ("mul10", 3)]
+
+
+def test_explicit_rollback_invalidates_descendants_and_reexecutes():
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        h.result(mul10(inc(1)))
+    [parent_key] = [k for k in store.keys()
+                    if store.entry(k)["task_name"] == "inc"]
+    store.invalidate(parent_key, descendants=True)
+    assert len(store) == 0
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        assert h.result(mul10(inc(1))) == 20
+        assert h.dfk.stats["memo_hits"] == 0
+    assert CALLS == [("inc", 1), ("mul10", 2)]
+
+
+def test_invalid_cached_result_triggers_dependency_aware_rollback():
+    """A cached result that fails the stack's result validation is rolled
+    back *with its descendants*, then the lineage re-executes fresh."""
+    from repro.api import replicate
+
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        h.result(mul10(inc(1)))
+    [parent_key] = [k for k in store.keys()
+                    if store.entry(k)["task_name"] == "inc"]
+    # poison the committed parent value (e.g. bit-rot in the store)
+    store.commit(parent_key, -7, task_name="inc")
+
+    _reset()
+    validated = inc.options(policy=replicate(1, validate=lambda v: v >= 0))
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        out = mul10(validated(1))
+        assert h.result(out) == 20        # recomputed, not the poisoned -7
+        assert h.dfk.stats["memo_hits"] == 0
+    # both the parent and its dependent child re-executed
+    assert CALLS == [("inc", 1), ("mul10", 2)]
+    assert store.lookup(parent_key) == (True, 2)
+
+
+def test_memo_hit_links_new_parent_lineage():
+    """Converging DAGs end to end: a child that memo-hits via a different
+    parent (same parent *value*, hence same child key) must gain the new
+    parent edge so rolling back that parent also drops the child."""
+    @task
+    def const_two(x):
+        CALLS.append(("const_two", x))
+        return 2
+
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        h.result(mul10(inc(1)))           # child key via inc's output (2)
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        assert h.result(mul10(const_two(0))) == 20
+        assert h.dfk.stats["memo_hits"] == 1      # the child short-circuits
+    assert CALLS == [("const_two", 0)]
+    [pb] = [k for k in store.keys()
+            if store.entry(k)["task_name"] == "const_two"]
+    [child] = [k for k in store.keys()
+               if store.entry(k)["task_name"] == "mul10"]
+    assert pb in store.entry(child)["parents"]
+    assert child in store.invalidate(pb, descendants=True)
+
+
+def test_workflow_scope_checkpoint_kwarg():
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2)) as h:
+        with h.dfk.workflow("stage", checkpoint=store):
+            h.result(inc(5))
+    assert len(store) == 1
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2)) as h:
+        with h.dfk.workflow("stage", checkpoint=store):
+            fut = inc(5)
+        assert h.result(fut) == 6
+        assert h.dfk.stats["memo_hits"] == 1
+        # unscoped submissions bypass the scope's store
+        assert h.result(inc(7)) == 8
+    assert CALLS == [("inc", 7)]
+
+
+def test_failures_are_never_committed():
+    @task(max_retries=0)
+    def boom():
+        CALLS.append(("boom",))
+        raise ValueError("nope")
+
+    store = TaskStore()
+    _reset()
+    for _ in range(2):
+        with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+            fut = boom()
+            h.run_until(fut.done)
+            with pytest.raises(ValueError):
+                fut.result(timeout=0)
+    assert len(store) == 0
+    assert CALLS == [("boom",), ("boom",)]  # re-executed after restart
+
+
+def test_late_duplicate_delivery_cannot_overwrite_committed_winner():
+    """Commits happen only for the attempt that won the task: a stale
+    racing attempt delivering a different value after resolution must be
+    discarded without touching the store."""
+    store = TaskStore()
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2), checkpoint=store) as h:
+        fut = inc(1)
+        assert h.result(fut) == 2
+        rec = fut.record
+        assert store.lookup(rec.lineage_key) == (True, 2)
+        h.dfk._on_result(rec, -99, None, None)   # late loser delivery
+        assert store.lookup(rec.lineage_key) == (True, 2)
+        assert len(store) == 1
+
+
+def test_memo_commit_only_policy_receives_commits():
+    """A policy overriding only memo_commit (e.g. a commit auditor or a
+    mirror store) must still be wired into the checkpoint fan-out."""
+    seen = []
+
+    class AuditCommits(ResiliencePolicy):
+        def memo_commit(self, rec, result, ctx):
+            seen.append((rec.name, result))
+
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2),
+                    policy=[AuditCommits()]) as h:
+        assert h.result(inc(1)) == 2
+    assert seen == [("inc", 2)]
+
+
+def test_task_store_attr_resolves_past_non_store_checkpointers():
+    """dfk.task_store must find the checkpoint= store even when another
+    memo-hook policy precedes it in the stack."""
+    class AuditCommits(ResiliencePolicy):
+        def memo_commit(self, rec, result, ctx):
+            pass
+
+    store = TaskStore()
+    with SimHarness(SimCluster.homogeneous(2),
+                    policy=[AuditCommits()], checkpoint=store) as h:
+        assert h.dfk.task_store is store
+
+
+def test_memo_lookup_errors_degrade_to_execution():
+    """A broken store must never wedge dispatch — the task just runs."""
+    class BrokenStore(ResiliencePolicy):
+        def memo_lookup(self, rec, ctx):
+            raise OSError("store unreachable")
+
+    _reset()
+    with SimHarness(SimCluster.homogeneous(2),
+                    policy=[BrokenStore()]) as h:
+        assert h.result(inc(1)) == 2
+    assert CALLS == [("inc", 1)]

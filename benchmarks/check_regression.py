@@ -1,0 +1,87 @@
+"""Throughput regression gate: compare a fresh BENCH JSON to a baseline.
+
+    python -m benchmarks.check_regression \
+        BENCH_engine_throughput.json bench-out/BENCH_engine_throughput.json
+
+Every ``*.tasks_per_sec`` metric in the baseline must be within
+``--tolerance`` (default 20%) below the committed value in the fresh
+run; higher-is-better, so only downward movement can fail.  Rows whose
+name contains ``_before_`` are the frozen pre-optimization reference —
+constants, not measurements — and are skipped.  Exit status is the
+gate: 0 = no regression, 1 = at least one metric regressed, 2 = a
+baseline metric is missing from the fresh run (a renamed or dropped row
+must update the committed baseline in the same change).
+
+CI runners are slower and noisier than the machine that produced the
+committed baseline; ``--tolerance`` (or ``BENCH_TOLERANCE``) is the
+knob that absorbs that, and the default is deliberately loose — the
+gate exists to catch the 2× dispatch-path regressions, not 5% jitter.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from pathlib import Path
+
+
+def compare(baseline: dict, fresh: dict, *, suffix: str,
+            tolerance: float) -> tuple[list[str], list[str]]:
+    """Returns (regressions, missing) message lists."""
+    regressions: list[str] = []
+    missing: list[str] = []
+    for key, base_val in sorted(baseline.get("metrics", {}).items()):
+        if not key.endswith(f".{suffix}") or "_before_" in key:
+            continue
+        new_val = fresh.get("metrics", {}).get(key)
+        if new_val is None:
+            missing.append(f"{key}: in baseline but absent from fresh run")
+            continue
+        floor = base_val * (1.0 - tolerance)
+        if new_val < floor:
+            regressions.append(
+                f"{key}: {new_val:.0f} < {floor:.0f} "
+                f"(baseline {base_val:.0f}, tolerance {tolerance:.0%})")
+    return regressions, missing
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m benchmarks.check_regression",
+        description="fail on tasks/sec regression vs a committed baseline")
+    ap.add_argument("baseline", type=Path,
+                    help="committed BENCH_<suite>.json")
+    ap.add_argument("fresh", type=Path,
+                    help="BENCH_<suite>.json from the current run")
+    ap.add_argument("--metric", default="tasks_per_sec",
+                    help="metric suffix to gate on (default tasks_per_sec)")
+    ap.add_argument("--tolerance",
+                    type=float,
+                    default=float(os.environ.get("BENCH_TOLERANCE", "0.20")),
+                    help="allowed fractional drop (default 0.20 or "
+                         "$BENCH_TOLERANCE)")
+    args = ap.parse_args(argv)
+
+    baseline = json.loads(args.baseline.read_text())
+    fresh = json.loads(args.fresh.read_text())
+    if fresh.get("error"):
+        print(f"REGRESSION GATE: fresh run errored: {fresh['error']}")
+        return 1
+    regressions, missing = compare(baseline, fresh, suffix=args.metric,
+                                   tolerance=args.tolerance)
+    for msg in regressions:
+        print(f"REGRESSION: {msg}")
+    for msg in missing:
+        print(f"MISSING: {msg}")
+    if regressions:
+        return 1
+    if missing:
+        return 2
+    print(f"regression gate ok: every *.{args.metric} within "
+          f"{args.tolerance:.0%} of {args.baseline}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

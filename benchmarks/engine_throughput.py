@@ -1,0 +1,125 @@
+"""Engine throughput: submit→resolve tasks/sec on the simulation executor.
+
+The dispatch-path benchmark behind the batched-dispatch + work-stealing
+engine work: N zero-duration tasks are submitted to a virtual-clock
+engine on an 8-node sim cluster and driven to resolution; every second
+of wall time is engine overhead (placement, bookkeeping, future
+resolution), none of it is task work.  Reported per scale:
+
+* ``tasks_per_sec`` — N / wall for the whole submit→resolve cycle
+  (best of ``repeats`` runs: the engine's capability, robust to
+  allocator/machine noise);
+* ``p99_submit_us`` — 99th-percentile latency of one ``dfk.submit``
+  call in the best run, the head-of-line cost the batched dispatch
+  queue is designed to bound;
+* ``speedup`` — vs the committed pre-optimization baseline row
+  (``engine_tp_before_*``), measured on the same machine at the commit
+  that introduced this suite.
+
+``engine_steal_*`` rows measure what stealing buys: the same task mix
+on a skewed cluster (two full-speed nodes, two 4× stragglers) placed
+round-robin, with and without work stealing.  Makespan is *virtual*
+seconds — fully deterministic, so the row doubles as a regression check
+that stealing keeps rescuing the backlog (and ``steals=0`` when off).
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+from benchmarks.common import csv_row
+from repro.engine.dfk import DataFlowKernel
+from repro.engine.task import ResourceSpec, TaskDef
+from repro.sim.clock import VirtualClock
+from repro.sim.cluster import Node, ResourcePool, SimCluster, SimExecutor
+
+# Pre-optimization throughput (commit bc20def^ engine: per-task dispatch
+# events, per-future condition objects, no batched bookkeeping), measured
+# by this same harness on the machine that produced the committed
+# BENCH_engine_throughput.json.  Kept as emitted rows so the before/after
+# pair travels together in one artifact.
+BASELINE = {
+    1_000: (13_090.0, 72.3),
+    10_000: (14_723.0, 70.3),
+    100_000: (9_328.0, 115.0),
+}
+
+
+def _noop(i: int) -> int:
+    return i
+
+
+def _one_run(n: int) -> tuple[float, float]:
+    """One submit→resolve cycle; returns (tasks_per_sec, p99_submit_us)."""
+    # drop the previous run's garbage first: live-heap pressure (not GC
+    # pauses) is the dominant cross-run interference at the 100k scale
+    gc.collect()
+    clock = VirtualClock()
+    cluster = SimCluster.homogeneous(8, workers_per_node=4)
+    td = TaskDef(_noop, "noop", ResourceSpec(memory_gb=0.0), 0)
+    lat = []
+    with DataFlowKernel(cluster, clock=clock,
+                        executor_factory=SimExecutor.factory(None)) as dfk:
+        t0 = time.perf_counter()
+        for i in range(n):
+            s = time.perf_counter()
+            dfk.submit(td, (i,), {})
+            lat.append(time.perf_counter() - s)
+        ok = dfk.wait_all(timeout=3600.0)
+        wall = time.perf_counter() - t0
+        if not ok or dfk.stats["completed"] != n:
+            raise RuntimeError(f"throughput run incomplete: {dfk.stats}")
+    lat.sort()
+    p99 = lat[min(int(0.99 * n), n - 1)] * 1e6
+    return n / wall, p99
+
+
+def _skewed_steal_run(*, work_stealing: bool, n_tasks: int = 64,
+                      duration_s: float = 2.0) -> tuple[float, int]:
+    """Round-robin on a skewed sim cluster; returns (virtual makespan, steals)."""
+    clock = VirtualClock()
+    nodes = [Node(name="fast0", speed=1.0, workers_per_node=1),
+             Node(name="fast1", speed=1.0, workers_per_node=1),
+             Node(name="slug0", speed=0.25, workers_per_node=1),
+             Node(name="slug1", speed=0.25, workers_per_node=1)]
+    cluster = SimCluster([ResourcePool("skew", nodes)])
+    td = TaskDef(_noop, "unit", ResourceSpec(memory_gb=0.0), 0)
+    with DataFlowKernel(cluster, clock=clock,
+                        executor_factory=SimExecutor.factory(
+                            {"unit": duration_s}),
+                        work_stealing=work_stealing) as dfk:
+        t0 = clock.now()
+        for i in range(n_tasks):
+            dfk.submit(td, (i,), {})
+        if not dfk.wait_all(timeout=100_000.0):
+            raise RuntimeError("steal run did not finish")
+        makespan = clock.now() - t0
+        steals = int(dfk.stats.get("steals", 0))
+    return makespan, steals
+
+
+def run(scales: tuple[int, ...] = (1_000, 10_000, 100_000),
+        repeats: int = 3) -> list[str]:
+    rows: list[str] = []
+    for n in scales:
+        best_tps, best_p99 = 0.0, 0.0
+        for _ in range(repeats):
+            tps, p99 = _one_run(n)
+            if tps > best_tps:
+                best_tps, best_p99 = tps, p99
+        base_tps, base_p99 = BASELINE.get(n, (0.0, 0.0))
+        if base_tps:
+            rows.append(csv_row(
+                f"engine_tp_before_{n}", 0.0,
+                f"tasks_per_sec={base_tps:.0f} p99_submit_us={base_p99:.1f}"))
+        speedup = best_tps / base_tps if base_tps else 0.0
+        rows.append(csv_row(
+            f"engine_tp_{n}", 1e6 / best_tps,
+            f"tasks_per_sec={best_tps:.0f} p99_submit_us={best_p99:.1f} "
+            f"speedup={speedup:.2f}"))
+    for stealing in (False, True):
+        makespan, steals = _skewed_steal_run(work_stealing=stealing)
+        rows.append(csv_row(
+            f"engine_steal_{'on' if stealing else 'off'}", 0.0,
+            f"makespan_virtual_s={makespan:.2f} steals={steals}"))
+    return rows

@@ -18,6 +18,7 @@ import time
 from pathlib import Path
 
 from benchmarks import (
+    engine_throughput,
     fig4_time_to_failure,
     fig5_overhead,
     fig6_scalability,
@@ -29,6 +30,7 @@ from benchmarks import (
 )
 
 SUITES = {
+    "engine_throughput": engine_throughput.run,
     "fig4": fig4_time_to_failure.run,
     "fig4_proactive": fig4_time_to_failure.run_proactive,
     "fig5": fig5_overhead.run,

@@ -25,6 +25,7 @@ import queue
 import threading
 import time
 import traceback
+from collections import deque
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -78,19 +79,26 @@ def enforce_and_reserve(node: "Node", spec) -> float:
     if not node.healthy:
         raise HardwareShutdownError(
             f"node {node.name} hardware is down", node=node.name)
-    missing = set(spec.packages) - set(node.packages)
-    if missing:
-        raise EnvironmentMismatchError(
-            f"No module named {sorted(missing)[0]!r} on {node.name}",
-            missing_packages=tuple(sorted(missing)),
-            node=node.name,
-        )
+    if spec.packages:
+        # only build the sets when the spec actually declares packages —
+        # a no-requirement task cannot be missing anything
+        missing = set(spec.packages) - set(node.packages)
+        if missing:
+            raise EnvironmentMismatchError(
+                f"No module named {sorted(missing)[0]!r} on {node.name}",
+                missing_packages=tuple(sorted(missing)),
+                node=node.name,
+            )
     if spec.open_files > node.ulimit_files:
         raise UlimitExceededError(
             f"OSError: [Errno 24] Too many open files "
             f"(need {spec.open_files}, ulimit {node.ulimit_files})",
             node=node.name,
         )
+    if not spec.memory_gb:
+        # a zero-GB request can neither overcommit nor need releasing;
+        # skip the reservation lock on the pickup hot path
+        return 0.0
     with node._mem_lock:
         if node.mem_in_use_gb + spec.memory_gb > node.memory_gb:
             # the OS would OOM-kill: manifest as MemoryError
@@ -108,6 +116,101 @@ def kill_current_worker(msg: str = "worker killed by injected failure") -> None:
     raise _WorkerKilled(msg)
 
 
+class RunQueue:
+    """Per-node run queue: FIFO for the owning node, stealable at the tail.
+
+    Replaces ``queue.Queue`` on :class:`Node` with the same blocking
+    ``get`` / ``queue.Empty`` surface the workers use, plus the two
+    operations the engine layers need that a ``queue.Queue`` cannot do
+    without draining and re-queueing the whole backlog:
+
+    * :meth:`steal_tail` — remove and return the *newest* record passing a
+      predicate.  Work stealing takes from the tail, leaving the oldest
+      entries to the owner: a stolen task is by construction one nobody
+      has started, which is what keeps the recovery semantics of a
+      migrated task identical to a freshly-placed one;
+    * :meth:`remove` — pull one specific queued record (real
+      cancellation) with a single O(n) scan, no drain/requeue churn;
+    * O(1) :meth:`qsize` — the queue-depth half of the scheduler's
+      incrementally-maintained load index.
+    """
+
+    __slots__ = ("_items", "_mutex", "_cond", "_waiting")
+
+    def __init__(self) -> None:
+        self._items: deque = deque()
+        # hold the raw lock directly on the hot paths: `with self._mutex`
+        # enters the C lock without the extra Condition.__enter__ frame,
+        # while the condition (sharing the same lock) serves blocking get
+        self._mutex = threading.Lock()
+        self._cond = threading.Condition(self._mutex)
+        # consumers currently blocked in get(); put() only pays for a
+        # notify when somebody is actually waiting (the sim plane never
+        # blocks, so its puts skip it every time)
+        self._waiting = 0
+
+    def put(self, item: "TaskRecord | None") -> None:
+        with self._mutex:
+            self._items.append(item)
+            if self._waiting:
+                self._cond.notify()
+
+    def get(self, timeout: float | None = None) -> "TaskRecord | None":
+        """Pop the oldest entry; raises ``queue.Empty`` on timeout."""
+        with self._mutex:
+            if not self._items:
+                self._waiting += 1
+                try:
+                    if timeout is None:
+                        while not self._items:
+                            self._cond.wait()
+                    else:
+                        deadline = time.monotonic() + timeout
+                        while not self._items:
+                            remaining = deadline - time.monotonic()
+                            if remaining <= 0:
+                                raise queue.Empty
+                            self._cond.wait(remaining)
+                finally:
+                    self._waiting -= 1
+            return self._items.popleft()
+
+    def get_nowait(self) -> "TaskRecord | None":
+        with self._mutex:
+            if not self._items:
+                raise queue.Empty
+            return self._items.popleft()
+
+    def steal_tail(self, stealable: Callable[["TaskRecord"], bool]
+                   ) -> "TaskRecord | None":
+        """Remove and return the newest record passing ``stealable``
+        (poison pills are never stolen); ``None`` if nothing qualifies."""
+        with self._mutex:
+            items = self._items
+            for i in range(len(items) - 1, -1, -1):
+                rec = items[i]
+                if rec is not None and stealable(rec):
+                    del items[i]
+                    return rec
+        return None
+
+    def remove(self, task_id: str) -> "TaskRecord | None":
+        """Pull one specific queued record off (real cancellation)."""
+        with self._mutex:
+            items = self._items
+            for i, rec in enumerate(items):
+                if rec is not None and rec.task_id == task_id:
+                    del items[i]
+                    return rec
+        return None
+
+    def qsize(self) -> int:
+        return len(self._items)
+
+    def empty(self) -> bool:
+        return not self._items
+
+
 @dataclass
 class Node:
     """One compute node (Environment layer)."""
@@ -122,11 +225,13 @@ class Node:
 
     # runtime state ------------------------------------------------------
     pool: "ResourcePool | None" = field(default=None, repr=False)
-    task_queue: "queue.Queue[TaskRecord | None]" = field(
-        default_factory=queue.Queue, repr=False)
+    task_queue: RunQueue = field(default_factory=RunQueue, repr=False)
     workers: list["Worker"] = field(default_factory=list, repr=False)
     manager: "NodeManager | None" = field(default=None, repr=False)
     mem_in_use_gb: float = 0.0
+    # busy half of the O(1) load index: maintained by the pickup/release
+    # paths (real and sim workers) instead of rescanning the worker list
+    busy_workers: int = field(default=0, repr=False)
     _mem_lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
 
     def satisfies(self, spec) -> tuple[bool, str]:
@@ -147,6 +252,12 @@ class Node:
     def restore_hardware(self) -> None:
         self.healthy = True
 
+    def adjust_busy(self, delta: int) -> None:
+        """Maintain the busy-worker count of the load index (clamped so a
+        double release can never drive the reported load negative)."""
+        with self._mem_lock:
+            self.busy_workers = max(0, self.busy_workers + delta)
+
     def remove_queued(self, task_id: str) -> TaskRecord | None:
         """Pull one queued (not yet picked up) record off this node's queue.
 
@@ -154,24 +265,9 @@ class Node:
         task can be preempted/cancelled without ever running.  Returns the
         removed record, or ``None`` if no queued record matches (e.g. a
         worker grabbed it first — callers fall back to the running-task
-        path).  Best-effort under concurrency: records drained while
-        scanning are requeued in order.
+        path).
         """
-        kept: list[TaskRecord | None] = []
-        removed: TaskRecord | None = None
-        while True:
-            try:
-                rec = self.task_queue.get_nowait()
-            except queue.Empty:
-                break
-            if (removed is None and rec is not None
-                    and rec.task_id == task_id):
-                removed = rec
-            else:
-                kept.append(rec)
-        for rec in kept:
-            self.task_queue.put(rec)
-        return removed
+        return self.task_queue.remove(task_id)
 
 
 @dataclass
@@ -219,7 +315,14 @@ class Worker:
             except queue.Empty:
                 if not self.node.healthy:
                     self.alive = False
-                continue
+                    continue
+                # idle with an empty queue: try to pull the newest queued
+                # record off a loaded sibling (decentralized work stealing;
+                # a no-op unless the executor enabled it)
+                mgr = self.node.manager
+                rec = mgr.try_steal() if mgr is not None else None
+                if rec is None:
+                    continue
             if rec is None:  # poison pill
                 self.alive = False
                 break
@@ -228,10 +331,12 @@ class Worker:
                 # already resolved (or re-dispatched) the task
                 continue
             self.busy = True
+            self.node.adjust_busy(+1)
             try:
                 self._run_one(rec)
             finally:
                 self.busy = False
+                self.node.adjust_busy(-1)
 
     # -- execution with environment enforcement -------------------------
     def _run_one(self, rec: TaskRecord) -> None:
@@ -239,8 +344,11 @@ class Worker:
         spec = rec.effective_resources()
         rec.start_time = time.time()
         # task-state lifecycle: the worker, not the executor, marks RUNNING —
-        # the straggler watcher and node-loss sweep key off this transition
-        if rec.state in (TaskState.SCHEDULED, TaskState.RETRYING):
+        # the straggler watcher and node-loss sweep key off this transition.
+        # READY is accepted too: under batched dispatch a worker can win the
+        # race with the drain loop's SCHEDULED bookkeeping write.
+        if rec.state in (TaskState.READY, TaskState.SCHEDULED,
+                         TaskState.RETRYING):
             rec.state = TaskState.RUNNING
             if rec.on_running is not None:
                 try:
@@ -271,11 +379,15 @@ class NodeManager:
     """Pilot-job node manager: spawns workers and heartbeats (paper §VI-A)."""
 
     def __init__(self, node: Node, on_result, heartbeat: Callable[[str, float], None] | None,
-                 heartbeat_period: float = 0.05, clock: Any = None):
+                 heartbeat_period: float = 0.05, clock: Any = None,
+                 steal_source: Callable[[Node], "TaskRecord | None"] | None = None):
         self.node = node
         self.on_result = on_result
         self.heartbeat = heartbeat
         self.heartbeat_period = heartbeat_period
+        # executor-provided hook (thief_node) -> record: the idle-worker
+        # steal path; None when work stealing is disabled
+        self.steal_source = steal_source
         # heartbeat timestamps go through the engine clock so watchers
         # comparing "now - last beat" agree on the timebase
         self.clock = clock
@@ -314,6 +426,12 @@ class NodeManager:
     def cancel(self, task_id: str) -> TaskRecord | None:
         """Remove a queued task from this node (real cancellation path)."""
         return self.node.remove_queued(task_id)
+
+    def try_steal(self) -> TaskRecord | None:
+        """Ask the executor for a stolen record on behalf of this node."""
+        if self.steal_source is None or not self.node.healthy:
+            return None
+        return self.steal_source(self.node)
 
     def pause_heartbeats(self) -> None:
         """Silence the heartbeat while workers keep running — the 'node

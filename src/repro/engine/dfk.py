@@ -61,6 +61,7 @@ from __future__ import annotations
 
 import threading
 import time
+from collections import deque
 from typing import Any, Iterable
 
 from repro.core.failures import (
@@ -132,6 +133,7 @@ class DataFlowKernel:
         retry_handler=None,              # deprecated: use policy=
         monitor=None,
         scheduler: Scheduler | None = None,
+        work_stealing: bool = False,
         proactive: Any = False,          # deprecated: use policy=[ProactivePolicy()]
         default_retries: int = 2,
         default_pool: str | None = None,
@@ -156,6 +158,12 @@ class DataFlowKernel:
         # loop instead of on worker threads.
         self._executor_factory = executor_factory
         self.scheduler = scheduler or RoundRobinScheduler()
+        # decentralized work stealing: idle nodes pull the newest queued
+        # record off the most-loaded sibling in their pool (victim picked
+        # through Scheduler.select_victim).  Off by default: stealing
+        # intentionally departs from the baseline round-robin placement
+        # parity, and pinned/speculative records are never stolen.
+        self.work_stealing = work_stealing
         # canonical resilience configuration: an ordered policy stack.  The
         # deprecated kwargs adapt into equivalent single-element stacks
         # appended after any explicitly-passed policies; checkpoint= joins
@@ -229,9 +237,22 @@ class DataFlowKernel:
         self._started = False
         self._shutting_down = False
 
+        # LOCKING DISCIPLINE: _lock guards the bookkeeping tables (tasks,
+        # stats, assignment, race/copy state) and nothing else.  Policy
+        # hooks, future resolution (set_result / set_exception and the
+        # done-callbacks they fire) and monitor writes always run OUTSIDE
+        # it — a callback that re-enters the engine (submit, cancel_task,
+        # preempt_task) while the lock is held would deadlock non-reentrant
+        # callers and inflates the critical section for every thread.
         self._lock = threading.RLock()
         self._all_done = threading.Condition(self._lock)
         self._outstanding = 0
+        # batched dispatch: ready submissions land here and one "dispatch"
+        # drain event places the whole burst — one event-loop entry and one
+        # bookkeeping lock acquisition per batch instead of per task
+        self._dispatch_queue: deque[TaskRecord] = deque()
+        self._drain_scheduled = False
+        self._dispatch_lock = threading.Lock()
         self.events = EventLoop(name="dfk-events", on_error=self._on_event_error,
                                 clock=self.clock)
 
@@ -245,6 +266,9 @@ class DataFlowKernel:
             "replicas": 0,
             # lineage-aware checkpoint plane: tasks resolved from the store
             "memo_hits": 0,
+            # decentralized work stealing: queued records migrated to an
+            # idle node (one count per hop)
+            "steals": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -267,8 +291,12 @@ class DataFlowKernel:
         hb = self.monitor.heartbeat if self.monitor is not None else None
         return Executor(
             pool, self._on_result, scheduler=self.scheduler, heartbeat=hb,
-            denylisted=lambda node: node in self.denylist,
-            heartbeat_period=self.heartbeat_period, clock=self.clock)
+            # the live set's bound __contains__: same live view as a
+            # lambda, minus a Python frame per check on the dispatch path
+            # (the set is only ever mutated in place, never rebound)
+            denylisted=self.denylist.__contains__,
+            heartbeat_period=self.heartbeat_period, clock=self.clock,
+            steal=self.work_stealing, on_steal=self._record_steal)
 
     def start(self) -> None:
         self.stats["start_time"] = self.clock.time()
@@ -387,22 +415,28 @@ class DataFlowKernel:
         if not parts:
             return self.policies          # common case: share the engine stack
         key = tuple(id(p) for p in parts)
-        cached = self._stack_cache.get(key)
+        with self._lock:
+            cached = self._stack_cache.get(key)
         if cached is not None:
             return cached
         # per-call policies must participate in the engine lifecycle like
         # engine/workflow ones: bind them (idempotent) and register any
-        # tickers so the periodic policy tick reaches them too
+        # tickers so the periodic policy tick reaches them too.  bind() is
+        # policy code — it runs outside _lock; the registry mutations
+        # themselves are guarded so concurrent submitters can't corrupt it
         for p in parts:
-            if id(p) not in self._adhoc_bound:
-                self._adhoc_bound[id(p)] = p
+            with self._lock:
+                fresh = id(p) not in self._adhoc_bound
+                if fresh:
+                    self._adhoc_bound[id(p)] = p
+                    if type(p).on_tick is not ResiliencePolicy.on_tick:
+                        self._adhoc_tickers.append(p)
+            if fresh:
                 p.bind(self)
-                if type(p).on_tick is not ResiliencePolicy.on_tick:
-                    self._adhoc_tickers.append(p)
         stack = PolicyStack(parts + self.policies.policies,
                             on_error=self._on_event_error)
-        self._stack_cache[key] = stack
-        return stack
+        with self._lock:
+            return self._stack_cache.setdefault(key, stack)
 
     def submit(self, td: TaskDef, args: tuple, kwargs: dict) -> AppFuture:
         if self._shutting_down:
@@ -435,13 +469,27 @@ class DataFlowKernel:
         rec.stack = self._resolve_stack(td, wf)
         if rec.stack.wants_running:
             rec.on_running = self._notify_running
-        deps = list({f.task_id: f for f in _iter_futures((args, kwargs))}.values())
-        rec.depends_on = [f.record for f in deps]
+        # dependency scan: the generic walk handles futures nested inside
+        # containers, but the overwhelmingly common sweep shape — scalar
+        # positional args, no kwargs — needs only one isinstance per arg
+        # to prove there is nothing to walk
+        deps: Any = ()
+        if kwargs or any(isinstance(a, (AppFuture, list, tuple, set, dict))
+                         for a in args):
+            deps = list({f.task_id: f
+                         for f in _iter_futures((args, kwargs))}.values())
+            if deps:
+                rec.depends_on = [f.record for f in deps]
         with self._lock:
             self.tasks[rec.task_id] = rec
             self.stats["submitted"] += 1
             self._outstanding += 1
-            pending = [f for f in deps if not f.done()]
+            pending = [f for f in deps if not f.done()] if deps else ()
+            if not pending:
+                # claim READY inline under the registration lock (no second
+                # acquisition): dependency callbacks aren't registered yet,
+                # so nothing else can race the PENDING->READY transition
+                rec.state = TaskState.READY
         try:
             if wf is not None:
                 wf._add(rec)
@@ -460,9 +508,7 @@ class DataFlowKernel:
                 rec.stack.on_submit(rec, self.context())
                 self.stats["wrath_overhead_s"] += time.perf_counter() - t0
             if not pending:
-                if self._claim_ready(rec):
-                    self.events.call_soon(self._maybe_dispatch, rec,
-                                          name="dispatch")
+                self._enqueue_dispatch(rec)
             else:
                 for f in pending:
                     f.add_done_callback(lambda _f, r=rec: self._dep_done(r))
@@ -471,7 +517,7 @@ class DataFlowKernel:
             # phantom outstanding task behind (wait_all would never return
             # and a map() sweep would lose capacity forever)
             with self._all_done:
-                if not getattr(rec, "_finished", False):
+                if not rec._finished:
                     self.tasks.pop(rec.task_id, None)
                     self.stats["submitted"] -= 1
                     self._outstanding -= 1
@@ -589,7 +635,7 @@ class DataFlowKernel:
     def _dep_done(self, rec: TaskRecord) -> None:
         if not self._claim_ready(rec):
             return
-        self.events.call_soon(self._maybe_dispatch, rec, name="dispatch")
+        self._enqueue_dispatch(rec)
 
     def _claim_ready(self, rec: TaskRecord) -> bool:
         """Atomically move PENDING -> READY once all parents resolved.
@@ -606,21 +652,69 @@ class DataFlowKernel:
             rec.state = TaskState.READY
             return True
 
-    def _maybe_dispatch(self, rec: TaskRecord) -> None:
-        """Dispatch a READY-claimed task (or fail it on parent failure)."""
-        failed_parent = next(
-            (p for p in rec.depends_on
-             if p.state in (TaskState.FAILED, TaskState.DEP_FAILED)), None)
-        if failed_parent is not None:
-            err = DependencyError(
-                f"dependency {failed_parent.task_id} ({failed_parent.name}) failed",
-                root_cause=failed_parent.exception)
-            report = self._make_report(rec, err, node=None, pool=None, worker=None)
-            self._route_failure(rec, report, err)
-            return
-        # dependencies satisfied: materialize parent results into the args
-        rec.args = _resolve(rec.args)
-        rec.kwargs = _resolve(rec.kwargs)
+    def _enqueue_dispatch(self, rec: TaskRecord) -> None:
+        """Queue a READY record for the next batched dispatch drain.
+
+        At most one drain event is in flight regardless of burst size, so
+        a 100k-task submission storm costs one event-loop entry per batch
+        instead of one per task.
+        """
+        with self._dispatch_lock:
+            self._dispatch_queue.append(rec)
+            if self._drain_scheduled:
+                return
+            self._drain_scheduled = True
+        self.events.call_soon(self._drain_dispatches, name="dispatch")
+
+    def _drain_dispatches(self) -> None:
+        """The dispatch event: place every queued submission in one pass.
+
+        Successful placements collect into a batch whose SCHEDULED
+        transition and assignment-table writes happen under one lock
+        acquisition (:meth:`_bookkeep_placements`); records that route to
+        a failure/memo path bookkeep themselves.  Loops until the queue is
+        empty, so records becoming READY mid-drain (memo hits resolving a
+        child's last dependency, policy-hook submissions) dispatch in this
+        same event rather than scheduling another.
+        """
+        while True:
+            with self._dispatch_lock:
+                if not self._dispatch_queue:
+                    self._drain_scheduled = False
+                    return
+                batch = list(self._dispatch_queue)
+                self._dispatch_queue.clear()
+            placed = []
+            for rec in batch:
+                out = self._maybe_dispatch(rec)
+                if out is not None:
+                    placed.append((rec, *out))
+            if placed:
+                self._bookkeep_placements(placed)
+
+    def _maybe_dispatch(self, rec: TaskRecord) -> tuple[str, Any, int] | None:
+        """Dispatch a READY-claimed task (or fail it on parent failure).
+
+        Returns the placement tuple for the drain loop's batched
+        bookkeeping, or ``None`` when the task resolved some other way
+        (parent failure, memo hit, fast-fail, resource starvation).
+        """
+        if rec.depends_on:
+            failed_parent = next(
+                (p for p in rec.depends_on
+                 if p.state in (TaskState.FAILED, TaskState.DEP_FAILED)), None)
+            if failed_parent is not None:
+                err = DependencyError(
+                    f"dependency {failed_parent.task_id} ({failed_parent.name}) failed",
+                    root_cause=failed_parent.exception)
+                report = self._make_report(rec, err, node=None, pool=None, worker=None)
+                self._route_failure(rec, report, err)
+                return None
+            # dependencies satisfied: materialize parent results into the
+            # args.  Dependency-free records skip the walk — their args
+            # cannot contain futures, or they would have had dependencies.
+            rec.args = _resolve(rec.args)
+            rec.kwargs = _resolve(rec.kwargs)
         # lineage-aware memoization: with a CheckpointPolicy in the stack
         # and the args now embedding every parent's result, a committed
         # result for this invocation hash resolves the future right here —
@@ -629,8 +723,8 @@ class DataFlowKernel:
         if (stack._checkpointers and rec.retry_count == 0
                 and not rec.cancel_requested
                 and self._try_memoized(rec, stack)):
-            return
-        self._dispatch(rec)
+            return None
+        return self._place(rec)
 
     def _try_memoized(self, rec: TaskRecord, stack: PolicyStack) -> bool:
         """Probe the checkpoint stores for this record's lineage key.
@@ -688,9 +782,15 @@ class DataFlowKernel:
         self._finish(rec, result=value)
         return True
 
-    def _dispatch(self, rec: TaskRecord) -> None:
+    def _place(self, rec: TaskRecord) -> tuple[str, Any, int] | None:
+        """Hand one record to its pool executor.
+
+        Returns ``(pool_name, node, steal_hops_before_queueing)`` for the
+        bookkeeping write, or ``None`` when the record took a
+        failure/fast-fail path instead (those bookkeep themselves).
+        """
         if self._done_first.get(rec.task_id) or rec.cancel_requested:
-            return  # cancelled/resolved while queued for dispatch
+            return None  # cancelled/resolved while queued for dispatch
         if rec.first_dispatch_time <= 0:
             rec.first_dispatch_time = self.clock.time()
         stack = rec.stack if rec.stack is not None else self.policies
@@ -700,29 +800,86 @@ class DataFlowKernel:
             self.stats["wrath_overhead_s"] += time.perf_counter() - t0
             if reason is not None:
                 self.fast_fail_task(rec.task_id, reason)
-                return
+                return None
         pool_name = rec.target_pool or rec.pool_default or self.default_pool
         ex = self.executors.get(pool_name)
         if ex is None:
             err = ResourceStarvationError(f"no executor for pool {pool_name!r}")
             self._route_failure(rec, self._make_report(rec, err), err)
-            return
+            return None
+        # snapshot the steal-hop count before the record becomes visible
+        # to workers: if a thief migrates it before our bookkeeping write
+        # lands, that write must not clobber the thief's assignment
+        hops = len(rec.steal_path)
         node = ex.submit(rec)
         if node is None:
             err = ResourceStarvationError(
                 f"no eligible node in pool {pool_name!r} "
                 f"(denylist={sorted(self.denylist)})", pool=pool_name)
             self._route_failure(rec, self._make_report(rec, err, pool=pool_name), err)
-            return
+            return None
+        return pool_name, node, hops
+
+    def _bookkeep_placements(
+            self, batch: list[tuple[TaskRecord, str, Any, int]]) -> None:
+        """State + assignment writes for a batch of placements under ONE
+        lock acquisition, then the out-of-lock side effects (monitor
+        events, replica launches).
+
+        Guards: only READY/RETRYING records are promoted to SCHEDULED — a
+        worker that already marked the task RUNNING, or a cancellation
+        that already made it terminal, is never clobbered — and a record
+        stolen between queueing and this write keeps the thief's
+        assignment (the hop count moved past the snapshot).
+        """
         with self._lock:
-            rec.state = TaskState.SCHEDULED
-            self._assignment[rec.task_id] = (pool_name, node.name)
+            for rec, pool_name, node, hops in batch:
+                if rec.state in (TaskState.READY, TaskState.RETRYING):
+                    rec.state = TaskState.SCHEDULED
+                if len(rec.steal_path) == hops:
+                    self._assignment[rec.task_id] = (pool_name, node.name)
+        monitor = self.monitor
+        for rec, pool_name, node, _hops in batch:
+            if monitor is not None:
+                monitor.record_task_event(
+                    rec.task_id, "scheduled", pool=pool_name, node=node.name,
+                    attempt=rec.retry_count)
+            if rec.replicas > 0 and rec.retry_count == 0:
+                self._launch_replicas(rec, first_node=node.name)
+
+    def _dispatch(self, rec: TaskRecord) -> None:
+        """Place one record immediately (retry / preempt / delayed-retry
+        paths; first-time submissions go through the batched drain)."""
+        out = self._place(rec)
+        if out is not None:
+            self._bookkeep_placements([(rec, *out)])
+
+    def _record_steal(self, rec: TaskRecord, victim: str, thief: str) -> None:
+        """Executor ``on_steal`` callback: re-point bookkeeping at the
+        thief before it runs the record.
+
+        The assignment table is what heartbeat-loss sweeps, cancellation,
+        preemption and drain key on, so it must follow the task; the
+        appended steal-path hop keeps the full migration history on the
+        record so a later failure categorizes and propagates (workflow
+        scope, retry rung, checkpoint lineage) against the node that
+        actually held the task.
+        """
+        with self._lock:
+            pool_name, _ = self._assignment.get(
+                rec.task_id,
+                (rec.target_pool or rec.pool_default or self.default_pool,
+                 None))
+            if not rec.steal_path:
+                rec.steal_path = []  # copy-on-write off the shared default
+            rec.steal_path.append(
+                {"from": victim, "to": thief, "time": self.clock.time()})
+            self._assignment[rec.task_id] = (pool_name, thief)
+            self.stats["steals"] += 1
         if self.monitor is not None:
             self.monitor.record_task_event(
-                rec.task_id, "scheduled", pool=pool_name, node=node.name,
-                attempt=rec.retry_count)
-        if rec.replicas > 0 and rec.retry_count == 0:
-            self._launch_replicas(rec, first_node=node.name)
+                rec.task_id, "stolen", node=thief, source=victim,
+                hops=len(rec.steal_path))
 
     # ------------------------------------------------------------------ #
     # cancellation / preemption / drain (the proactive action surface)
@@ -938,6 +1095,13 @@ class DataFlowKernel:
 
     def _cancel_race_loser(self, winner: TaskRecord, task_id: str) -> None:
         """When one attempt resolves the task, cancel every other attempt."""
+        if not self._spec_copies:
+            # no speculation in flight anywhere: skip the lock round-trip
+            # on the result hot path.  The unlocked emptiness read is
+            # benign — a copy registered concurrently with this result is
+            # already harmless, because a loser that keeps running is
+            # dropped by the winner-takes-future guard at pickup/delivery
+            return
         with self._lock:
             copies = self._spec_copies.pop(task_id, None)
             if copies is None:
@@ -959,7 +1123,8 @@ class DataFlowKernel:
     # ------------------------------------------------------------------ #
     def _on_result(self, rec: TaskRecord, result: Any,
                    err: BaseException | None, worker: Any) -> None:
-        pool, node = self._assignment.get(rec.task_id, (None, None))
+        tid = rec.task_id
+        pool, node = self._assignment.get(tid, (None, None))
         # attribute the attempt to the node that actually ran it: for a
         # speculative copy the assignment table still points at the
         # straggler, which would credit the backup's fast finish to the
@@ -968,18 +1133,17 @@ class DataFlowKernel:
         if wnode is not None:
             node = wnode.name
             pool = wnode.pool.name if wnode.pool is not None else pool
-        if err is None and not rec.cancel_requested:
+        primary = self.tasks.get(tid, rec)
+        stack = primary.stack if primary.stack is not None else self.policies
+        if err is None and not rec.cancel_requested and stack._validators:
             # result validation (e.g. replicate(validate=)): an invalid
             # result — from the original or any racing copy — is discarded
             # and converted into a failure of this attempt
-            primary = self.tasks.get(rec.task_id, rec)
-            stack = primary.stack if primary.stack is not None else self.policies
-            if stack._validators:
-                t0 = time.perf_counter()
-                vexc = stack.on_result(primary, result, self.context())
-                self.stats["wrath_overhead_s"] += time.perf_counter() - t0
-                if vexc is not None:
-                    err = vexc
+            t0 = time.perf_counter()
+            vexc = stack.on_result(primary, result, self.context())
+            self.stats["wrath_overhead_s"] += time.perf_counter() - t0
+            if vexc is not None:
+                err = vexc
         duration = rec.end_time - rec.start_time
         rec.record_attempt(node=node or "?", pool=pool or "?",
                            worker=getattr(worker, "worker_id", "?"),
@@ -987,7 +1151,7 @@ class DataFlowKernel:
                            duration=duration)
         if self.monitor is not None:
             self.monitor.record_task_event(
-                rec.task_id, "finished" if err is None else "error",
+                tid, "finished" if err is None else "error",
                 node=node, pool=pool, duration=duration,
                 error=type(err).__name__ if err else None)
             if node:
@@ -995,15 +1159,14 @@ class DataFlowKernel:
                     rec.name, node, pool, ok=err is None, duration=duration,
                     memory_gb=rec.effective_resources().memory_gb)
         with self._lock:
-            if self._done_first.get(rec.task_id):
+            if self._done_first.get(tid):
                 return  # another attempt (or a cancellation) resolved this task
             if err is None:
-                self._done_first[rec.task_id] = True
+                self._done_first[tid] = True
                 rec.state = TaskState.COMPLETED
                 # a winning copy must also complete the *original* record —
                 # it is the one registered in workflow scopes and stats
-                primary = self.tasks.get(rec.task_id)
-                if primary is not None and primary is not rec:
+                if primary is not rec:
                     primary.state = TaskState.COMPLETED
                 if rec.retry_count > 0:
                     self.stats["retry_success"] += 1
@@ -1013,14 +1176,12 @@ class DataFlowKernel:
             # commit the winning value to the checkpoint stores (a losing
             # racing copy's different result must never overwrite what the
             # future actually resolved with)
-            primary = self.tasks.get(rec.task_id, rec)
-            stack = primary.stack if primary.stack is not None else self.policies
             if stack._checkpointers and not rec.cancel_requested:
                 t0 = time.perf_counter()
                 stack.memo_commit(primary, result, self.context())
                 self.stats["wrath_overhead_s"] += time.perf_counter() - t0
-            self._pending_terminal.pop(rec.task_id, None)
-            self._cancel_race_loser(rec, rec.task_id)
+            self._pending_terminal.pop(tid, None)
+            self._cancel_race_loser(rec, tid)
             self._finish(rec, result=result)
         else:
             if rec.is_speculative:
@@ -1119,7 +1280,11 @@ class DataFlowKernel:
                 rec.target_pool = decision.target_pool
                 rec.target_node = target_node
                 if decision.resource_overrides:
-                    rec.resource_overrides.update(decision.resource_overrides)
+                    # copy-on-write: the record's default is a shared
+                    # empty mapping that must never be mutated in place
+                    rec.resource_overrides = {
+                        **rec.resource_overrides,
+                        **decision.resource_overrides}
             # delayed retries are ordinary events on the engine loop — no
             # per-retry Timer thread
             if decision.delay_s > 0:
@@ -1188,9 +1353,9 @@ class DataFlowKernel:
         fut = rec.future
         assert fut is not None
         with self._all_done:
-            if getattr(rec, "_finished", False) or fut.done():
+            if rec._finished or fut.done():
                 return  # idempotent: speculation/races must not double-set
-            rec._finished = True  # type: ignore[attr-defined]
+            rec._finished = True
             self._outstanding -= 1
             if self._outstanding <= 0:
                 self._all_done.notify_all()
@@ -1236,10 +1401,14 @@ class DataFlowKernel:
                 self._resume_logged.discard(node_name)
 
     def _fail_tasks_on_node(self, node_name: str) -> None:
-        victims = [rec for tid, rec in self.tasks.items()
-                   if self._assignment.get(tid, (None, None))[1] == node_name
-                   and rec.state in (TaskState.SCHEDULED, TaskState.RUNNING)
-                   and not self._done_first.get(tid)]
+        # snapshot under the lock: concurrent submits mutate self.tasks,
+        # and an unguarded comprehension over the live dict can raise
+        # "dictionary changed size during iteration" mid-sweep
+        with self._lock:
+            victims = [rec for tid, rec in self.tasks.items()
+                       if self._assignment.get(tid, (None, None))[1] == node_name
+                       and rec.state in (TaskState.SCHEDULED, TaskState.RUNNING)
+                       and not self._done_first.get(tid)]
         for rec in victims:
             err = HardwareShutdownError(
                 f"node {node_name} lost (heartbeat silent)", node=node_name)

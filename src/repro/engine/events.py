@@ -166,8 +166,17 @@ class EventLoop:
             if self._stopped:
                 ev.cancelled = True
                 return ev
-            heapq.heappush(self._heap, (ev.when, next(self._seq), ev))
-            self._cond.notify_all()
+            heap = self._heap
+            # wakeup coalescing: the consumer only needs a nudge when the
+            # new event preempts the head it is already sleeping toward
+            # (or the heap was empty).  Equal-timestamp bursts — the
+            # call_soon fan-out storm — enqueue silently: the consumer
+            # wakes for the head and drains everything due.  Inline mode
+            # (virtual clock) has no consumer thread to wake at all.
+            preempts = not heap or ev.when < heap[0][0]
+            heapq.heappush(heap, (ev.when, next(self._seq), ev))
+            if preempts and self._thread is not None:
+                self._cond.notify_all()
         return ev
 
     def call_later(self, delay: float, fn: Callable[..., Any], *args: Any,
@@ -255,7 +264,9 @@ class EventLoop:
                 if not self._stopped:
                     ev.when = self.clock.now() + ev.period
                     heapq.heappush(self._heap, (ev.when, next(self._seq), ev))
-                    self._cond.notify_all()
+                    # no notify: _execute only ever runs on the consumer
+                    # thread (or inline under a virtual clock) — both
+                    # re-examine the heap right after this returns
 
     def _run(self) -> None:
         while True:

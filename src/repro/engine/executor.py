@@ -32,6 +32,8 @@ class Executor:
         denylisted: Callable[[str], bool] = lambda node: False,
         heartbeat_period: float = 0.05,
         clock: Clock | None = None,
+        steal: bool = False,
+        on_steal: Callable[[TaskRecord, str, str], None] | None = None,
     ):
         self.pool = pool
         self.on_result = on_result
@@ -42,6 +44,11 @@ class Executor:
         self._heartbeat = heartbeat
         self._heartbeat_period = heartbeat_period
         self.clock = clock or REAL_CLOCK
+        # decentralized work stealing: idle workers pull queued records off
+        # loaded siblings via steal_task(); on_steal(rec, victim, thief) is
+        # the DFK bookkeeping callback fired before the thief runs it
+        self.steal = steal
+        self.on_steal = on_steal
         self._started = False
 
     # -- pilot-job lifecycle ---------------------------------------------
@@ -50,7 +57,9 @@ class Executor:
         for node in self.pool.nodes:
             mgr = NodeManager(node, self.on_result, self._heartbeat,
                               heartbeat_period=self._heartbeat_period,
-                              clock=self.clock)
+                              clock=self.clock,
+                              steal_source=self.steal_task if self.steal
+                              else None)
             node.manager = mgr
             try:
                 mgr.start()
@@ -76,8 +85,12 @@ class Executor:
         :class:`~repro.engine.scheduler.FeasibilityScheduler` or of WRATH
         pinning ``target_node``/``target_pool``.
         """
-        return [n for n in self.pool.healthy_nodes()
-                if not self.denylisted(n.name)]
+        # one pass, one list: health and denylist checks fused (this runs
+        # once per placement, so the extra healthy_nodes() round-trip and
+        # intermediate list were pure overhead at 100k-task scale)
+        denylisted = self.denylisted
+        return [n for n in self.pool.nodes
+                if n.healthy and not denylisted(n.name)]
 
     def select_node(self, record: TaskRecord) -> Node | None:
         if record.target_node:
@@ -92,7 +105,10 @@ class Executor:
         node = self.select_node(record)
         if node is None:
             return None
-        if not any(w.alive for w in node.workers):
+        for w in node.workers:
+            if w.alive:
+                break
+        else:
             # every worker on the target died (e.g. killed mid-task) and the
             # manager's periodic respawn hasn't fired yet: respawn now so
             # the submission doesn't stall for up to a heartbeat period
@@ -101,6 +117,45 @@ class Executor:
                 mgr.restart_dead_workers()
         node.task_queue.put(record)
         return node
+
+    # -- work stealing -----------------------------------------------------
+    def steal_task(self, thief: Node) -> TaskRecord | None:
+        """Steal one queued record for an idle ``thief`` node.
+
+        Victim selection goes through the scheduler interface
+        (:meth:`~repro.engine.scheduler.Scheduler.select_victim`, fed by
+        the same O(1) load index placement uses); the removal takes the
+        *newest* stealable record off the victim's run-queue tail.  A
+        record is stealable only when nothing pinned it (``target_node``
+        pins cover retry-rung placement; speculative copies are excluded
+        outright so a racing copy can't migrate away from the diversity
+        it was launched for), no cancellation or resolution raced it, and
+        the thief can statically satisfy its resource spec.  ``on_steal``
+        fires before the record is handed over, so the DFK re-points its
+        assignment table while the task is still invisible to the thief's
+        execution path.
+        """
+        if not self.steal or not thief.healthy or self.denylisted(thief.name):
+            return None
+        victims = [n for n in self.pool.healthy_nodes()
+                   if n is not thief and not self.denylisted(n.name)]
+        victim = self.scheduler.select_victim(thief, victims, pool=self.pool)
+        if victim is None:
+            return None
+        rec = victim.task_queue.steal_tail(
+            lambda r: self._stealable(r, thief))
+        if rec is None:
+            return None
+        if self.on_steal is not None:
+            self.on_steal(rec, victim.name, thief.name)
+        return rec
+
+    def _stealable(self, rec: TaskRecord, thief: Node) -> bool:
+        return (not rec.cancel_requested
+                and not rec.is_speculative
+                and rec.target_node is None
+                and not (rec.future is not None and rec.future.done())
+                and thief.satisfies(rec.effective_resources())[0])
 
     def cancel_queued(self, task_id: str, node_name: str) -> TaskRecord | None:
         """Real cancellation: pull a still-queued task off its node.

@@ -42,9 +42,13 @@ def node_load(node: "Node") -> float:
     a slow node holds its workers busy longer and its queue backs up, so
     load alone steers traffic away from stragglers without needing to know
     node speeds.
+
+    Both terms are O(1) reads of incrementally-maintained counters — the
+    run-queue depth and the ``busy_workers`` count the pickup/release
+    paths keep current — so :class:`LeastLoadedScheduler`, victim
+    selection and the monitoring snapshots never rescan the worker list.
     """
-    busy = sum(1 for w in node.workers if w.alive and getattr(w, "busy", False))
-    return node.task_queue.qsize() + busy
+    return node.task_queue.qsize() + node.busy_workers
 
 
 class Scheduler:
@@ -65,6 +69,26 @@ class Scheduler:
     def select(self, record: "TaskRecord", nodes: list["Node"], *,
                pool: "ResourcePool | None" = None) -> "Node | None":
         raise NotImplementedError
+
+    def select_victim(self, thief: "Node", nodes: list["Node"], *,
+                      pool: "ResourcePool | None" = None) -> "Node | None":
+        """Pick the node an idle ``thief`` should steal queued work from.
+
+        The work-stealing half of the placement interface: ``nodes`` is
+        the already-filtered candidate list (healthy, non-denylisted,
+        thief excluded) in pool order.  The default shared by every
+        strategy picks the deepest run queue — the same load index
+        ``select`` consumes — with ties broken by pool order (first
+        wins), so victim choice is deterministic under the sim plane's
+        virtual clock.  ``None`` means nothing is worth stealing.
+        """
+        best: "Node | None" = None
+        best_depth = 0
+        for n in nodes:
+            depth = n.task_queue.qsize()
+            if depth > best_depth:
+                best, best_depth = n, depth
+        return best
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return f"<{type(self).__name__} {self.name!r}>"
@@ -94,7 +118,11 @@ class RoundRobinScheduler(Scheduler):
             return None
         key = pool.name if pool is not None else "?"
         with self._lock:
-            counter = self._counters.setdefault(key, itertools.count())
+            counter = self._counters.get(key)
+            if counter is None:
+                # not setdefault: that would build (and discard) a fresh
+                # itertools.count per placement once the key exists
+                counter = self._counters[key] = itertools.count()
             return nodes[next(counter) % len(nodes)]
 
 

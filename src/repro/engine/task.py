@@ -12,7 +12,13 @@ import enum
 import itertools
 import threading
 import time
-from concurrent.futures import Future
+from concurrent.futures import CancelledError, Future, TimeoutError
+from concurrent.futures._base import (
+    CANCELLED as _CANCELLED,
+    CANCELLED_AND_NOTIFIED as _CANCELLED_AND_NOTIFIED,
+    FINISHED as _FINISHED,
+    PENDING as _PENDING,
+)
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
@@ -56,12 +62,75 @@ class ResourceSpec:
         }
 
 
+# One process-wide condition shared by every AppFuture.
+#
+# ``threading.Condition()`` costs several microseconds and ~400 bytes per
+# instance (RLock, waiter deque, bound-method rebinds) — the single
+# largest allocation on the submit hot path when the engine mints one
+# future per task at 100k-task scale.  Future's locking discipline makes
+# sharing safe: every internal method holds ``_condition`` only for
+# short state transitions (callbacks and waiter notification run outside
+# it), and ``concurrent.futures.wait`` acquires the conditions of all
+# waited futures in sequence — with one shared *recursive* lock those
+# nested acquires simply re-enter.  The one semantic caveat is spurious
+# wakeups: a completion of ANY future notifies the shared condition, so
+# blocking reads must re-check state in a loop — which is exactly what
+# :meth:`AppFuture.result` / :meth:`AppFuture.exception` below do,
+# replacing the base class's single-``wait`` versions.
+_SHARED_FUTURE_CONDITION = threading.Condition()
+
+
 class AppFuture(Future):
     """Future for a task invocation; hashable and usable as a dependency."""
 
     def __init__(self, record: "TaskRecord"):
-        super().__init__()
+        # mirrors Future.__init__ field-for-field (asserted by the engine
+        # test suite); the super() call is skipped only to avoid building
+        # a throwaway per-instance Condition (see note above)
+        self._condition = _SHARED_FUTURE_CONDITION
+        self._state = _PENDING
+        self._result = None
+        self._exception = None
+        self._waiters: list = []
+        self._done_callbacks: list = []
         self.record = record
+
+    def result(self, timeout: float | None = None) -> Any:
+        """As :meth:`Future.result`, robust to the shared condition's
+        spurious wakeups (wait in a deadline loop, not a single pass)."""
+        with self._condition:
+            deadline = (time.monotonic() + timeout
+                        if timeout is not None else None)
+            while True:
+                if self._state in (_CANCELLED, _CANCELLED_AND_NOTIFIED):
+                    raise CancelledError()
+                if self._state == _FINISHED:
+                    return self._Future__get_result()
+                if deadline is None:
+                    self._condition.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError()
+                    self._condition.wait(remaining)
+
+    def exception(self, timeout: float | None = None) -> BaseException | None:
+        """As :meth:`Future.exception`, spurious-wakeup robust."""
+        with self._condition:
+            deadline = (time.monotonic() + timeout
+                        if timeout is not None else None)
+            while True:
+                if self._state in (_CANCELLED, _CANCELLED_AND_NOTIFIED):
+                    raise CancelledError()
+                if self._state == _FINISHED:
+                    return self._exception
+                if deadline is None:
+                    self._condition.wait()
+                else:
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        raise TimeoutError()
+                    self._condition.wait(remaining)
 
     @property
     def task_id(self) -> str:
@@ -73,10 +142,28 @@ class AppFuture(Future):
 
 _task_counter = itertools.count()
 
+# Shared empty-container defaults for TaskRecord's list/dict fields.
+# Most records never retry, never get stolen, and never receive resource
+# overrides, so four per-record empty containers at 100k-task scale are
+# pure allocator pressure.  Every default below is a shared sentinel that
+# is NEVER mutated in place — the appending sites (record_attempt,
+# DataFlowKernel._record_steal, the rung-1 override merge) copy-on-write
+# a private container into the field first.
+_NO_DEPS: list = []
+_NO_ATTEMPTS: list = []
+_NO_OVERRIDES: dict = {}
+_NO_STEALS: list = []
 
-@dataclass
+
+@dataclass(slots=True)
 class TaskRecord:
-    """Full bookkeeping for one task invocation (Framework layer state)."""
+    """Full bookkeeping for one task invocation (Framework layer state).
+
+    ``slots=True`` matters at engine-throughput scale: a 100k-task sweep
+    keeps 100k of these alive for the session, and slotted storage both
+    drops the per-record ``__dict__`` allocation and keeps attribute reads
+    on the dispatch/result hot paths at fixed offsets.
+    """
 
     task_id: str
     fn: Callable[..., Any]
@@ -86,16 +173,18 @@ class TaskRecord:
     resources: ResourceSpec
     max_retries: int
     state: TaskState = TaskState.PENDING
-    depends_on: list["TaskRecord"] = field(default_factory=list)
+    depends_on: list["TaskRecord"] = field(default_factory=lambda: _NO_DEPS)
     future: AppFuture | None = None
     # --- execution history ---------------------------------------------
     retry_count: int = 0
-    attempts: list[dict[str, Any]] = field(default_factory=list)
+    attempts: list[dict[str, Any]] = field(
+        default_factory=lambda: _NO_ATTEMPTS)
     # placement chosen by the scheduler / retry handler for next attempt
     target_pool: str | None = None
     target_node: str | None = None
     # resource overrides suggested by the resilience module (rung 1)
-    resource_overrides: dict[str, Any] = field(default_factory=dict)
+    resource_overrides: dict[str, Any] = field(
+        default_factory=lambda: _NO_OVERRIDES)
     submit_time: float = 0.0
     # first time the DFK tried to place this task (dependencies resolved);
     # per-task TTF measures from here so dependency wait isn't billed
@@ -114,6 +203,12 @@ class TaskRecord:
     # backup copy launched by straggler speculation / preemptive migration;
     # its result is only used if it finishes before the original
     is_speculative: bool = False
+    # work-stealing migration history, one hop per steal (newest last):
+    # ``{"from": victim, "to": thief, "time": wall}``.  The steal tree the
+    # hierarchical response consults — a stolen task's failure must
+    # categorize and propagate against the node that actually held it, not
+    # the one the dispatcher originally picked
+    steal_path: list[dict[str, Any]] = field(default_factory=lambda: _NO_STEALS)
     # --- hierarchy & policy plumbing (set by the DFK at submit) ---------
     # owning Workflow scope (None = engine root scope)
     workflow: Any = field(default=None, repr=False)
@@ -131,7 +226,9 @@ class TaskRecord:
     # engine callback fired by the worker on the RUNNING transition (only
     # set when some policy in the stack overrides on_running)
     on_running: Any = field(default=None, repr=False)
-    lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    # set (exactly once, under the DFK's _all_done condition) when the
+    # engine resolves this task's future and releases its outstanding slot
+    _finished: bool = field(default=False, repr=False)
 
     def effective_resources(self) -> ResourceSpec:
         """Resources after applying WRATH rung-1 overrides."""
@@ -144,6 +241,8 @@ class TaskRecord:
 
     def record_attempt(self, *, node: str, pool: str, worker: str,
                        ok: bool, error: str | None, duration: float) -> None:
+        if self.attempts is _NO_ATTEMPTS:
+            self.attempts = []  # copy-on-write off the shared default
         self.attempts.append({
             "attempt": len(self.attempts),
             "node": node,

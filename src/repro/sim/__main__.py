@@ -41,12 +41,17 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--max-tasks", type=int, default=16)
     ap.add_argument("--show-trace", action="store_true",
                     help="print the first scenario's full event trace")
+    ap.add_argument("--work-stealing", action="store_true",
+                    help="run every scenario with decentralized work "
+                         "stealing enabled (determinism checks included)")
     args = ap.parse_args(argv)
 
+    engine_kwargs = {"work_stealing": True} if args.work_stealing else None
     if args.show_trace:
         result = run_scenario(
             Scenario.random(args.base_seed, max_tasks=args.max_tasks),
-            policy_factory=_policy_factory(args.policy))
+            policy_factory=_policy_factory(args.policy),
+            engine_kwargs=engine_kwargs)
         print(result.scenario.describe())
         print(result.trace)
         print(result.summary())
@@ -56,7 +61,8 @@ def main(argv: list[str] | None = None) -> int:
         args.scenarios, base_seed=args.base_seed,
         policy_factory=_policy_factory(args.policy),
         determinism_checks=args.determinism_checks,
-        scenario_kwargs={"max_tasks": args.max_tasks})
+        scenario_kwargs={"max_tasks": args.max_tasks},
+        engine_kwargs=engine_kwargs)
     print(report.summary())
     if not report.ok:
         for seed, viol in report.violations[:20]:

@@ -30,6 +30,7 @@ from __future__ import annotations
 
 import queue
 import traceback
+from concurrent.futures._base import PENDING as _F_PENDING
 from typing import Any, Callable
 
 from repro.core.failures import PilotJobInitError, WorkerLostError
@@ -115,6 +116,10 @@ class SimNodeManager:
         self._spawned = 0
         self._hb_paused = False
         self._hb_event: Any = None
+        # pump coalescing: a submission burst to this node schedules ONE
+        # sim-pump event, not one per record (the flag is cleared when the
+        # event fires, single-threaded and therefore deterministic)
+        self._pump_scheduled = False
 
     # -- lifecycle --------------------------------------------------------
     def start(self) -> None:
@@ -216,24 +221,54 @@ class SimNodeManager:
         return True
 
     # -- execution ---------------------------------------------------------
+    def schedule_pump(self) -> None:
+        """Request a pickup pass; coalesces into one pending pump event."""
+        if self._pump_scheduled:
+            return
+        self._pump_scheduled = True
+        self.executor.events.call_soon(self._pump_event, name="sim-pump")
+
+    def _pump_event(self) -> None:
+        self._pump_scheduled = False
+        self.pump()
+
     def pump(self) -> None:
-        """Assign queued records to free workers (the pickup event)."""
+        """Assign queued records to free workers (the pickup event).
+
+        When this node's own queue is dry and a free worker remains, the
+        pump tries to *steal* the newest queued record off a loaded
+        sibling (a no-op unless the engine enabled work stealing) — the
+        event-loop analog of the real worker's steal-on-idle, running
+        deterministically in (timestamp, FIFO) event order.
+        """
         if not self.node.healthy:
             return
         while True:
-            worker = next(
-                (w for w in self.node.workers if w.alive and not w.busy), None)
+            # plain loop, not next(genexp): restart_dead_workers() may
+            # rebind node.workers mid-drain (a task body killing the last
+            # worker triggers an inline respawn), so re-read it each pass
+            worker = None
+            for w in self.node.workers:
+                if w.alive and not w.busy:
+                    worker = w
+                    break
             if worker is None:
                 return
             try:
                 rec = self.node.task_queue.get_nowait()
             except queue.Empty:
-                return
+                rec = self.executor.steal_task(self.node)
+                if rec is None:
+                    return
             if rec is None or rec.cancel_requested or (
-                    rec.future is not None and rec.future.done()):
+                    rec.future is not None
+                    and rec.future._state != _F_PENDING):
                 # cancelled while queued, or a stale entry whose task was
                 # already re-routed and resolved elsewhere (e.g. failed by
-                # the heartbeat watcher while this node was down): drop
+                # the heartbeat watcher while this node was down): drop.
+                # The raw _state read (vs. future.done(), which takes the
+                # condition) is safe here: the sim is single-threaded, and
+                # engine futures only ever leave PENDING to terminal states
                 continue
             self.executor._start_task(self, worker, rec)
 
@@ -242,6 +277,8 @@ class SimNodeManager:
             with self.node._mem_lock:
                 self.node.mem_in_use_gb -= worker.held_gb
             worker.held_gb = 0.0
+        if worker.busy:
+            self.node.adjust_busy(-1)
         worker.busy = False
         worker.current = None
         worker.completion = None
@@ -284,9 +321,11 @@ class SimExecutor(Executor):
             return cls(pool, dfk._on_result, events=dfk.events,
                        durations=durations, scheduler=dfk.scheduler,
                        heartbeat=hb,
-                       denylisted=lambda node: node in dfk.denylist,
+                       denylisted=dfk.denylist.__contains__,
                        heartbeat_period=dfk.heartbeat_period,
-                       clock=dfk.clock)
+                       clock=dfk.clock,
+                       steal=getattr(dfk, "work_stealing", False),
+                       on_steal=dfk._record_steal)
         return make
 
     # -- pilot-job lifecycle ----------------------------------------------
@@ -316,7 +355,7 @@ class SimExecutor(Executor):
         if node is not None:
             mgr = self.managers.get(node.name)
             if mgr is not None:
-                self.events.call_soon(mgr.pump, name="sim-pump")
+                mgr.schedule_pump()
         return node
 
     # -- scripted faults ----------------------------------------------------
@@ -334,10 +373,11 @@ class SimExecutor(Executor):
         if mgr is not None:
             mgr.restart_dead_workers()
             # records still queued from before the outage get picked back up
-            self.events.call_soon(mgr.pump, name="sim-pump")
+            mgr.schedule_pump()
 
     # -- inline execution ---------------------------------------------------
-    def _duration(self, rec: TaskRecord, node: Node) -> float:
+    def _duration(self, rec: TaskRecord, node: Node,
+                  spec: Any = None) -> float:
         base: float | None = None
         if callable(self.durations):
             base = self.durations(rec, node)
@@ -346,7 +386,10 @@ class SimExecutor(Executor):
         if base is None:
             base = getattr(rec.fn, "sim_duration", None)
         if base is None:
-            base = rec.effective_resources().est_duration_s
+            base = (spec if spec is not None
+                    else rec.effective_resources()).est_duration_s
+        if not base:
+            return 0.0
         return max(float(base), 0.0) / max(node.speed, 1e-6)
 
     def _start_task(self, mgr: SimNodeManager, worker: SimWorker,
@@ -362,7 +405,8 @@ class SimExecutor(Executor):
         node = mgr.node
         spec = rec.effective_resources()
         rec.start_time = self.clock.time()
-        if rec.state in (TaskState.SCHEDULED, TaskState.RETRYING):
+        if rec.state in (TaskState.READY, TaskState.SCHEDULED,
+                         TaskState.RETRYING):
             rec.state = TaskState.RUNNING
             if rec.on_running is not None:
                 try:
@@ -383,7 +427,7 @@ class SimExecutor(Executor):
             _current.node, _current.worker = node, worker
             try:
                 result = rec.fn(*rec.args, **rec.kwargs)
-                duration = self._duration(rec, node)
+                duration = self._duration(rec, node, spec)
             except _WorkerKilled as wk:
                 worker.alive = False
                 err = WorkerLostError(str(wk), node=node.name,
@@ -393,7 +437,23 @@ class SimExecutor(Executor):
                 err._wrath_traceback = traceback.format_exc()  # type: ignore[attr-defined]
             finally:
                 _current.node = _current.worker = None
+        if duration == 0.0:
+            # Inline delivery: a zero-duration completion scheduled at +0
+            # virtual seconds would fire at this same timestamp anyway, so
+            # skipping the sim-complete round-trip (heap push/pop, release,
+            # re-pump) changes no virtual time and no task outcome — it
+            # removes the dominant per-task event cost of large sweeps.
+            # The worker is never marked busy: it is free again before the
+            # pump loop's next pickup, exactly as after a +0 delivery.
+            if worker.held_gb:
+                with node._mem_lock:
+                    node.mem_in_use_gb -= worker.held_gb
+                worker.held_gb = 0.0
+            rec.end_time = rec.start_time
+            self.on_result(rec, result, err, worker)
+            return
         worker.busy = True
+        node.adjust_busy(+1)
         worker.current = rec
         worker.completion = self.events.call_later(
             duration, self._deliver, worker, rec, result, err,
@@ -408,4 +468,4 @@ class SimExecutor(Executor):
         rec.end_time = self.clock.time()
         self.on_result(rec, result, err, worker)
         if mgr is not None:
-            self.events.call_soon(mgr.pump, name="sim-pump")
+            mgr.schedule_pump()

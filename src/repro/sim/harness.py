@@ -251,12 +251,19 @@ def run_scenario(scenario: Scenario, *,
                  default_retries: int = 3,
                  heartbeat_period: float = 0.1,
                  heartbeat_threshold: float = 5.0,
-                 task_store: Any = None) -> ScenarioResult:
+                 task_store: Any = None,
+                 engine_kwargs: dict[str, Any] | None = None) -> ScenarioResult:
     """Execute one scenario on a fresh virtual-clock engine.
 
     ``policy_factory`` builds the resilience stack per run (policies bind
     to one engine, so a *factory*, not an instance); default is WRATH's
     taxonomy-driven hierarchical retry.
+
+    ``engine_kwargs`` are forwarded verbatim to every
+    :class:`~repro.engine.dfk.DataFlowKernel` the scenario builds
+    (including post-crash incarnations) — e.g.
+    ``engine_kwargs={"work_stealing": True}`` runs the whole campaign
+    with decentralized work stealing on.
 
     ``engine_crash`` faults tear the whole engine down and rebuild it
     against the same lineage-aware :class:`~repro.checkpoint.task_store.
@@ -293,7 +300,8 @@ def run_scenario(scenario: Scenario, *,
             executor_factory=SimExecutor.factory(scenario.durations),
             default_retries=default_retries,
             heartbeat_period=heartbeat_period,
-            heartbeat_threshold=heartbeat_threshold)
+            heartbeat_threshold=heartbeat_threshold,
+            **(engine_kwargs or {}))
         dfk.start()
         state["dfk"] = dfk
         state["cluster"] = cluster
@@ -527,7 +535,8 @@ class CampaignResult:
 def campaign(n: int, *, base_seed: int = 0,
              policy_factory: Callable[[], Any] | None = None,
              determinism_checks: int = 1,
-             scenario_kwargs: dict[str, Any] | None = None) -> CampaignResult:
+             scenario_kwargs: dict[str, Any] | None = None,
+             engine_kwargs: dict[str, Any] | None = None) -> CampaignResult:
     """Run ``n`` seeded chaos scenarios and check every invariant.
 
     Seeds are ``base_seed .. base_seed + n - 1``.  The first
@@ -543,13 +552,15 @@ def campaign(n: int, *, base_seed: int = 0,
     for k in range(n):
         seed = base_seed + k
         scenario = Scenario.random(seed, **kw)
-        result = run_scenario(scenario, policy_factory=policy_factory)
+        result = run_scenario(scenario, policy_factory=policy_factory,
+                              engine_kwargs=engine_kwargs)
         out.results.append(result)
         for viol in result.violations:
             out.violations.append((seed, viol))
         if k < determinism_checks:
             replay = run_scenario(Scenario.random(seed, **kw),
-                                  policy_factory=policy_factory)
+                                  policy_factory=policy_factory,
+                                  engine_kwargs=engine_kwargs)
             if replay.trace != result.trace:
                 out.violations.append(
                     (seed, "nondeterminism: same seed produced a "

@@ -1,0 +1,272 @@
+"""Decentralized work stealing: run-queue semantics, steal bookkeeping,
+failure attribution across a steal, and determinism under the sim clock.
+
+The skewed two-node cluster (one full-speed node, one 4× straggler) is
+the canonical steal topology: round-robin placement keeps feeding the
+slug, the fast node drains its own queue first and then starts pulling
+the slug's backlog off the tail.  Every scenario runs on the virtual
+clock, so steal interleavings are scripted, not raced.
+"""
+import queue
+import threading
+from concurrent.futures import CancelledError
+from concurrent.futures import TimeoutError as FuturesTimeoutError
+from concurrent.futures import wait as futures_wait
+
+import pytest
+
+from repro.engine import Node, ResourcePool, task
+from repro.engine.cluster import RunQueue
+from repro.engine.task import ResourceSpec, TaskDef, new_task_record
+from repro.sim import SimCluster, SimHarness, campaign
+
+
+def _skew() -> SimCluster:
+    nodes = [Node("fast", speed=1.0, workers_per_node=1),
+             Node("slug", speed=0.25, workers_per_node=1)]
+    return SimCluster([ResourcePool("p", nodes)])
+
+
+def _rec(name: str = "t"):
+    return new_task_record(TaskDef(lambda: None, name, ResourceSpec(), 0),
+                           (), {}, default_retries=0)
+
+
+# --------------------------------------------------------------------- #
+# run-queue primitive
+# --------------------------------------------------------------------- #
+def test_run_queue_fifo_for_owner_stealable_at_tail():
+    q = RunQueue()
+    with pytest.raises(queue.Empty):
+        q.get_nowait()
+    with pytest.raises(queue.Empty):
+        q.get(timeout=0.01)
+    recs = [_rec(f"t{i}") for i in range(3)]
+    for r in recs:
+        q.put(r)
+    assert q.qsize() == 3 and not q.empty()
+    # stealing takes the newest entry; the owner still drains FIFO
+    assert q.steal_tail(lambda r: True) is recs[2]
+    assert q.get_nowait() is recs[0]
+    assert q.remove(recs[1].task_id) is recs[1]
+    assert q.remove("task-999999") is None
+    assert q.empty()
+
+
+def test_steal_tail_skips_cancelled_and_pinned_records():
+    q = RunQueue()
+    recs = [_rec(f"t{i}") for i in range(3)]
+    recs[1].target_node = "elsewhere"     # retry-rung pin: not stealable
+    recs[2].cancel_requested = True       # cancelled: never back to life
+    for r in recs:
+        q.put(r)
+
+    def stealable(r):
+        return not r.cancel_requested and r.target_node is None
+
+    assert q.steal_tail(stealable) is recs[0]
+    assert q.steal_tail(stealable) is None
+    assert q.qsize() == 2
+
+
+# --------------------------------------------------------------------- #
+# steal bookkeeping on the engine
+# --------------------------------------------------------------------- #
+def test_steal_moves_queued_task_to_idle_node():
+    with SimHarness(_skew(), durations={"work": 1.0},
+                    work_stealing=True) as h:
+        @task
+        def work(i):
+            return i
+
+        futs = [work(i) for i in range(4)]
+        assert h.wait_all(timeout=30)
+        assert [h.result(f) for f in futs] == [0, 1, 2, 3]
+        assert h.dfk.stats["steals"] == 1
+        stolen = [f.record for f in futs if f.record.steal_path]
+        assert len(stolen) == 1
+        hop = stolen[0].steal_path[-1]
+        assert hop["from"] == "slug" and hop["to"] == "fast"
+        # the attempt ran on the thief, not where placement put it
+        assert stolen[0].attempts[-1]["node"] == "fast"
+        # makespan is bounded by the slug's one *running* task (4 virtual
+        # seconds), not its whole backlog (8 without stealing)
+        assert h.clock.now() <= 4.5
+
+
+def test_no_stealing_without_the_flag():
+    with SimHarness(_skew(), durations={"work": 1.0}) as h:
+        @task
+        def work(i):
+            return i
+
+        futs = [work(i) for i in range(4)]
+        assert h.wait_all(timeout=30)
+        assert h.dfk.stats["steals"] == 0
+        assert all(not f.record.steal_path for f in futs)
+        assert h.clock.now() >= 7.5
+
+
+def test_stolen_task_failure_propagates_to_owning_scope():
+    """A stolen task's failure lands in the Workflow scope that owns it,
+    attributed to the thief node — the steal-tree record keeps hierarchy
+    bookkeeping correct across the migration."""
+    with SimHarness(_skew(), durations={"work": 1.0, "boom": 1.0},
+                    work_stealing=True) as h:
+        @task
+        def work(i):
+            return i
+
+        @task(max_retries=0)
+        def boom():
+            raise ZeroDivisionError("stolen and doomed")
+
+        wf = h.dfk.workflow("grp", propagate="siblings")
+        f0 = work(0)                            # fast, 0→1
+        sib = work.options(workflow=wf)(1)      # slug, running 0→4
+        filler = work(2)                        # fast queue, 1→2
+        bad = boom.options(workflow=wf)()       # slug queue → stolen at 2
+        assert h.wait_all(timeout=60)
+        assert h.result(f0) == 0 and h.result(filler) == 2
+        assert h.dfk.stats["steals"] >= 1
+        rec = bad.record
+        assert rec.steal_path and rec.steal_path[-1]["to"] == "fast"
+        assert rec.attempts[-1]["node"] == "fast"
+        assert isinstance(bad.exception(timeout=0), ZeroDivisionError)
+        # siblings propagation fired in the *owning* scope: the running
+        # sibling was cancelled instead of completing at t=4
+        assert sib.exception(timeout=0) is not None
+        # tasks outside the scope were untouched by the propagation
+        assert f0.exception(timeout=0) is None
+
+
+def test_cancelled_scope_tasks_are_not_stolen_back_to_life():
+    with SimHarness(_skew(), durations={"work": 1.0},
+                    work_stealing=True) as h:
+        @task
+        def work(i):
+            return i
+
+        wf = h.dfk.workflow("doomed")
+        f0 = work(0)                            # fast, 0→1
+        running = work.options(workflow=wf)(1)  # slug, running 0→4
+        filler = work(2)                        # fast queue, 1→2
+        victim = work.options(workflow=wf)(3)   # slug queue
+        h.advance(0.5)                          # placed; victim still queued
+        wf.cancel("scripted")
+        assert h.wait_all(timeout=30)
+        assert victim.exception(timeout=0) is not None
+        assert not victim.record.attempts       # never ran anywhere
+        assert not victim.record.steal_path
+        assert running.exception(timeout=0) is not None
+        # when the fast node went idle there was nothing left to steal
+        assert h.dfk.stats["steals"] == 0
+        assert h.result(f0) == 0 and h.result(filler) == 2
+
+
+def test_node_loss_after_steal_attributes_to_thief():
+    """Heartbeat loss on the *thief* fails and reroutes the stolen task:
+    the sweep keys on the assignment table, which the steal re-pointed.
+    Without that re-pointing the sweep would find nothing on the dead
+    node and no retry would ever fire."""
+    with SimHarness(_skew(), durations={"work": 1.0, "roam": 5.0},
+                    work_stealing=True, heartbeat_period=0.1,
+                    heartbeat_threshold=1.0) as h:
+        @task
+        def work(i):
+            return i
+
+        @task
+        def roam():
+            return "done"
+
+        work(0), work(1), work(2)               # fast 0→1, slug 0→4, fast 1→2
+        fut = roam()                            # slug queue → stolen at 2
+        assert h.run_until(lambda: h.dfk.stats["steals"] >= 1, timeout=10)
+        assert fut.record.steal_path[-1]["to"] == "fast"
+        h.fail_node("fast")                     # thief goes silent mid-run
+        # the watcher fails the stolen task ON THE THIEF within the
+        # staleness window (well before the in-flight delivery at t=7)
+        # and reroutes it — only possible with the re-pointed assignment
+        assert h.run_until(lambda: h.dfk.stats["retries"] >= 1, timeout=2.5)
+        assert h.wait_all(timeout=200)
+        assert fut.result(timeout=0) == "done"
+        # real-cluster parity: heartbeat silence is not proof of death —
+        # the thief's in-flight attempt still delivered (t=7, before the
+        # slug-side retry could finish) and won the future
+        assert fut.record.attempts[-1]["node"] == "fast"
+        assert fut.record.attempts[-1]["ok"]
+
+
+# --------------------------------------------------------------------- #
+# determinism
+# --------------------------------------------------------------------- #
+def test_steal_interleavings_trace_deterministic():
+    def one() -> str:
+        with SimHarness(_skew(), durations={"work": 1.0},
+                        work_stealing=True, trace=True) as h:
+            @task
+            def work(i):
+                return i
+
+            futs = [work(i) for i in range(12)]
+            assert h.wait_all(timeout=120)
+            assert h.dfk.stats["steals"] >= 1
+            assert all(f.exception(timeout=0) is None for f in futs)
+            return h.trace()
+
+    first, second = one(), one()
+    assert "stolen" in first
+    assert first == second
+
+
+def test_same_seed_campaign_identical_with_stealing():
+    rep = campaign(6, determinism_checks=6,
+                   engine_kwargs={"work_stealing": True})
+    assert rep.ok, rep.violations
+
+
+# --------------------------------------------------------------------- #
+# AppFuture shared-condition semantics (the batched-dispatch fast path)
+# --------------------------------------------------------------------- #
+def test_appfuture_shared_condition_semantics():
+    futs = [_rec(f"f{i}").future for i in range(3)]
+    with pytest.raises(FuturesTimeoutError):
+        futs[0].result(timeout=0.01)
+    with pytest.raises(FuturesTimeoutError):
+        futs[0].exception(timeout=0.01)
+    calls = []
+    futs[0].add_done_callback(calls.append)
+    futs[0].set_result(7)
+    assert futs[0].result(timeout=0) == 7
+    assert futs[0].exception(timeout=0) is None
+    assert calls == [futs[0]]
+    futs[1].set_exception(ValueError("x"))
+    assert isinstance(futs[1].exception(timeout=0), ValueError)
+    with pytest.raises(ValueError):
+        futs[1].result(timeout=0)
+    futs[2].set_result(1)
+    # concurrent.futures.wait acquires every waited future's condition at
+    # once; all AppFutures share ONE condition object, so this exercises
+    # the reentrant acquisition the shared condition relies on
+    done, not_done = futures_wait(futs, timeout=1.0)
+    assert done == set(futs) and not not_done
+
+
+def test_appfuture_result_blocks_until_cross_thread_resolution():
+    fut = _rec().future
+    timer = threading.Timer(0.05, fut.set_result, args=(42,))
+    timer.start()
+    try:
+        assert fut.result(timeout=5.0) == 42
+    finally:
+        timer.cancel()
+
+
+def test_appfuture_cancel_raises_cancelled_error():
+    fut = _rec().future
+    assert fut.cancel()
+    with pytest.raises(CancelledError):
+        fut.result(timeout=0)
+    with pytest.raises(CancelledError):
+        fut.exception(timeout=0)

@@ -1,16 +1,23 @@
-"""Throughput regression gate: compare a fresh BENCH JSON to a baseline.
+"""Perf regression gate: compare a fresh BENCH JSON to a baseline.
 
     python -m benchmarks.check_regression \
         BENCH_engine_throughput.json bench-out/BENCH_engine_throughput.json
+    python -m benchmarks.check_regression --metric achieved_gflops \
+        BENCH_kernels.json bench-out/BENCH_kernels.json
 
-Every ``*.tasks_per_sec`` metric in the baseline must be within
-``--tolerance`` (default 20%) below the committed value in the fresh
-run; higher-is-better, so only downward movement can fail.  Rows whose
-name contains ``_before_`` are the frozen pre-optimization reference —
-constants, not measurements — and are skipped.  Exit status is the
-gate: 0 = no regression, 1 = at least one metric regressed, 2 = a
-baseline metric is missing from the fresh run (a renamed or dropped row
-must update the committed baseline in the same change).
+Every gated metric in the baseline must be within ``--tolerance``
+(default 20%) below the committed value in the fresh run;
+higher-is-better, so only downward movement can fail.  ``--metric``
+selects the gated suffix (default ``tasks_per_sec``, the engine
+throughput gate) and may be repeated to gate several suffixes in one
+invocation — the kernel suite gates ``achieved_gflops`` per kernel and
+per train step.  Rows whose name contains ``_before_`` are the frozen
+pre-optimization reference — the untuned measurement the suite reports
+for context, not the thing being protected — and are skipped.  Exit
+status is the gate: 0 = no regression, 1 = at least one metric
+regressed, 2 = a baseline metric is missing from the fresh run (a
+renamed or dropped row must update the committed baseline in the same
+change).
 
 CI runners are slower and noisier than the machine that produced the
 committed baseline; ``--tolerance`` (or ``BENCH_TOLERANCE``) is the
@@ -54,8 +61,9 @@ def main(argv: list[str] | None = None) -> int:
                     help="committed BENCH_<suite>.json")
     ap.add_argument("fresh", type=Path,
                     help="BENCH_<suite>.json from the current run")
-    ap.add_argument("--metric", default="tasks_per_sec",
-                    help="metric suffix to gate on (default tasks_per_sec)")
+    ap.add_argument("--metric", action="append", default=None,
+                    help="metric suffix to gate on (repeatable; default "
+                         "tasks_per_sec)")
     ap.add_argument("--tolerance",
                     type=float,
                     default=float(os.environ.get("BENCH_TOLERANCE", "0.20")),
@@ -68,8 +76,14 @@ def main(argv: list[str] | None = None) -> int:
     if fresh.get("error"):
         print(f"REGRESSION GATE: fresh run errored: {fresh['error']}")
         return 1
-    regressions, missing = compare(baseline, fresh, suffix=args.metric,
-                                   tolerance=args.tolerance)
+    metrics = args.metric or ["tasks_per_sec"]
+    regressions: list[str] = []
+    missing: list[str] = []
+    for suffix in metrics:
+        reg, mis = compare(baseline, fresh, suffix=suffix,
+                           tolerance=args.tolerance)
+        regressions += reg
+        missing += mis
     for msg in regressions:
         print(f"REGRESSION: {msg}")
     for msg in missing:
@@ -78,7 +92,7 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     if missing:
         return 2
-    print(f"regression gate ok: every *.{args.metric} within "
+    print(f"regression gate ok: every *.{{{','.join(metrics)}}} within "
           f"{args.tolerance:.0%} of {args.baseline}")
     return 0
 

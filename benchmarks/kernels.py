@@ -1,0 +1,185 @@
+"""Kernel performance plane: roofline-tracked timings for the Pallas
+kernels and a full train step.
+
+For each kernel shape the suite runs the autotune sweep
+(``repro.kernels.autotune``), then reports a *before* row (the hard-coded
+128-block defaults — excluded from the regression gate, it is the frozen
+reference point) and a *tuned* row (the cache-persisted winner).  Every
+row divides achieved FLOP/s and bandwidth by the roofline terms from
+``repro.roofline`` (v5e peak FLOP/s and HBM bandwidth, the same constants
+the dry-run analysis uses), so ``BENCH_kernels.json`` tracks
+"fraction of the hardware roofline" per push, not just microseconds.
+
+The FLOP yardstick is *useful work* (chunk/block-independent — flash:
+4·BH·Sq·Sk·D, halved for causal; SSD: 4·B·H·L·P·N), the kernel analog of
+the roofline plane's 6·N·D model FLOPs: block choices change the time,
+never the numerator.
+
+On this CPU container the kernels run in interpret mode (the Pallas body
+executes in Python), so absolute roofline fractions are tiny; on a TPU
+host the same suite measures the compiled kernels against the real roof.
+
+    PYTHONPATH=src python -m benchmarks.run kernels
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import csv_row
+from repro.launch.mesh import HBM_BW, PEAK_FLOPS_BF16
+
+#: flash shapes: (label, batch, seq, heads, head_dim, causal).  s320 is
+#: deliberately not a multiple of 128 — the default blocks pad 320 -> 384
+#: (a 3x3 grid), while the tuner can pick blocks that divide 320.
+FLASH_SHAPES = [
+    ("s256_d64", 1, 256, 4, 64, True),
+    ("s320_d64", 1, 320, 4, 64, True),
+]
+
+#: ssd shapes: (label, batch, seq, heads, head_channels, state).  l160 is
+#: the non-multiple-of-128 case for the chunked scan.
+SSD_SHAPES = [
+    ("l256_p16", 2, 256, 2, 16, 32),
+    ("l160_p16", 2, 160, 2, 16, 32),
+]
+
+TRAIN_ARCH = "granite-3-2b"
+TRAIN_BATCH, TRAIN_SEQ = 4, 64
+REPEATS = 3
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def _flash_flops(bh: int, s: int, sk: int, d: int, causal: bool) -> float:
+    return 4.0 * bh * s * sk * d * (0.5 if causal else 1.0)
+
+
+def _flash_bytes(bh: int, s: int, sk: int, d: int, itemsize: int) -> float:
+    return float(bh * (2 * s * d + 2 * sk * d) * itemsize)   # q, out, k, v
+
+
+def _ssd_flops(b: int, l: int, h: int, p: int, n: int) -> float:
+    return 4.0 * b * h * l * p * n     # state update + output contraction
+
+
+def _ssd_bytes(b: int, l: int, h: int, p: int, n: int, itemsize: int) -> float:
+    x_y = 2 * b * l * h * p
+    dt = b * l * h
+    bc = 2 * b * l * n
+    state = b * h * p * n
+    return float((x_y + dt + bc + state) * itemsize)
+
+
+def _derived(us: float, flops: float, nbytes: float, extra: str = "") -> str:
+    """Achieved rates + their roofline fractions (single chip)."""
+    s = us / 1e6
+    gflops = flops / s / 1e9
+    gbps = nbytes / s / 1e9
+    out = (f"achieved_gflops={gflops:.4g};achieved_gbps={gbps:.4g};"
+           f"compute_frac={gflops * 1e9 / PEAK_FLOPS_BF16:.3g};"
+           f"hbm_frac={gbps * 1e9 / HBM_BW:.3g}")
+    return f"{out};{extra}" if extra else out
+
+
+def _bench_flash() -> list[str]:
+    from repro.kernels.autotune import autotune_flash_attention
+
+    rows = []
+    key = jax.random.PRNGKey(11)
+    for label, b, s, h, d, causal in FLASH_SHAPES:
+        bh = b * h
+        q = jax.random.normal(key, (bh, s, d), jnp.float32)
+        k = jax.random.normal(jax.random.fold_in(key, 1), (bh, s, d), jnp.float32)
+        v = jax.random.normal(jax.random.fold_in(key, 2), (bh, s, d), jnp.float32)
+        res = autotune_flash_attention(q, k, v, causal=causal,
+                                       interpret=_interpret(), repeats=REPEATS)
+        flops = _flash_flops(bh, s, s, d, causal)
+        nbytes = _flash_bytes(bh, s, s, d, q.dtype.itemsize)
+        rows.append(csv_row(
+            f"kernels_flash_{label}_before_tuning", res.default_us,
+            _derived(res.default_us, flops, nbytes, "qb=128;kb=128")))
+        blk = res.blocks
+        rows.append(csv_row(
+            f"kernels_flash_{label}_tuned", res.us,
+            _derived(res.us, flops, nbytes,
+                     f"qb={blk['q_block']};kb={blk['kv_block']};"
+                     f"speedup={res.speedup:.3f}")))
+    return rows
+
+
+def _bench_ssd() -> list[str]:
+    from repro.kernels.autotune import autotune_ssd_scan
+
+    rows = []
+    key = jax.random.PRNGKey(13)
+    for label, b, l, h, p, n in SSD_SHAPES:
+        x = jax.random.normal(key, (b, l, h, p), jnp.float32)
+        dt = jax.nn.softplus(
+            jax.random.normal(jax.random.fold_in(key, 1), (b, l, h)))
+        a = -jnp.exp(jax.random.normal(jax.random.fold_in(key, 2), (h,)) * 0.3)
+        bm = jax.random.normal(jax.random.fold_in(key, 3), (b, l, n))
+        cm = jax.random.normal(jax.random.fold_in(key, 4), (b, l, n))
+        res = autotune_ssd_scan(x, dt, a, bm, cm, interpret=_interpret(),
+                                repeats=REPEATS)
+        flops = _ssd_flops(b, l, h, p, n)
+        nbytes = _ssd_bytes(b, l, h, p, n, x.dtype.itemsize)
+        rows.append(csv_row(
+            f"kernels_ssd_{label}_before_tuning", res.default_us,
+            _derived(res.default_us, flops, nbytes, "chunk=128")))
+        rows.append(csv_row(
+            f"kernels_ssd_{label}_tuned", res.us,
+            _derived(res.us, flops, nbytes,
+                     f"chunk={res.blocks['chunk']};"
+                     f"speedup={res.speedup:.3f}")))
+    return rows
+
+
+def _bench_train_step() -> list[str]:
+    """One real grad step (smoke config, jit-compiled): useful 6·N·D FLOPs
+    and HLO-reported FLOPs/bytes over measured step time, as fractions of
+    the same roofline terms the dry-run analysis reports."""
+    from repro.configs import get_smoke_config
+    from repro.data import batch_for
+    from repro.models import loss_fn, materialize, param_defs
+    from repro.roofline.analysis import hlo_cost, model_flops
+
+    cfg = get_smoke_config(TRAIN_ARCH)
+    defs = param_defs(cfg)
+    params = materialize(defs, jax.random.PRNGKey(0))
+    batch = batch_for(cfg, TRAIN_BATCH, TRAIN_SEQ, 0)
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda p, b: loss_fn(p, b, cfg, remat=False)[0]))
+    lowered = grad_fn.lower(params, batch)
+    compiled = lowered.compile()
+    hlo = hlo_cost(compiled)
+
+    out = compiled(params, batch)
+    jax.block_until_ready(out)
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(params, batch))
+        best = min(best, time.perf_counter() - t0)
+    us = best * 1e6
+
+    tokens = TRAIN_BATCH * TRAIN_SEQ
+    useful = model_flops(cfg, defs, kind="train", tokens=tokens)
+    s = best
+    return [csv_row(
+        f"kernels_train_step_{cfg.name}", us,
+        f"achieved_gflops={hlo['flops'] / s / 1e9:.4g};"
+        f"useful_gflops={useful / s / 1e9:.4g};"
+        f"achieved_gbps={hlo['bytes'] / s / 1e9:.4g};"
+        f"compute_frac={hlo['flops'] / s / PEAK_FLOPS_BF16:.3g};"
+        f"hbm_frac={hlo['bytes'] / s / HBM_BW:.3g};"
+        f"roofline_frac={useful / s / PEAK_FLOPS_BF16:.3g};"
+        f"tokens_per_s={tokens / s:.1f}")]
+
+
+def run() -> list[str]:
+    return _bench_flash() + _bench_ssd() + _bench_train_step()

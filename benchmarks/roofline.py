@@ -6,6 +6,7 @@ artifacts (benchmarks/results/dryrun/*.json).  Run the dry-run first:
 from __future__ import annotations
 
 import json
+import sys
 from pathlib import Path
 
 from benchmarks.common import csv_row
@@ -13,11 +14,22 @@ from benchmarks.common import csv_row
 RESULTS = Path(__file__).resolve().parent / "results" / "dryrun"
 
 
-def load_cells(mesh: str | None = None) -> list[dict]:
+def load_cells(mesh: str | None = None, *, verbose: bool = True) -> list[dict]:
+    """Dry-run cells with ``status == "ok"``.
+
+    Every skipped artifact is logged with its status (no silent caps):
+    a failed or skipped compile cell silently vanishing from the table
+    would read as full coverage when it is not.
+    """
     cells = []
     for p in sorted(RESULTS.glob("*.json")):
         d = json.loads(p.read_text())
-        if d.get("status") != "ok":
+        status = d.get("status")
+        if status != "ok":
+            if verbose:
+                why = d.get("skip_reason") or d.get("error", "").partition("\n")[0]
+                print(f"roofline: skipping {p.name}: status={status}"
+                      + (f" ({why[:100]})" if why else ""), file=sys.stderr)
             continue
         if mesh and d["roofline"]["mesh"] != mesh:
             continue

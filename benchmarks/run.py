@@ -24,6 +24,7 @@ from benchmarks import (
     fig6_scalability,
     fig7_overhead_scaling,
     fig8_failure_rate,
+    kernels,
     roofline,
     table4_success_rates,
     train_recovery,
@@ -31,6 +32,7 @@ from benchmarks import (
 
 SUITES = {
     "engine_throughput": engine_throughput.run,
+    "kernels": kernels.run,
     "fig4": fig4_time_to_failure.run,
     "fig4_proactive": fig4_time_to_failure.run_proactive,
     "fig5": fig5_overhead.run,

@@ -1,0 +1,343 @@
+"""Block-size autotuning for the Pallas kernels, with a persistent cache.
+
+The kernels ship MXU-friendly 128-block defaults, but the best block
+shape depends on the input shape, dtype and the device generation —
+and the right answer does not change between runs on the same hardware.
+This module closes that loop the same way the proactive sentinel's
+feasibility-verdict cache does for placement decisions (PR 2): measure
+once, key the verdict by a *device signature*, and consult the cache
+transparently on every subsequent call.
+
+* :func:`device_signature` — ``platform:device_kind:core_count`` (the
+  sentinel's cluster-signature idiom, applied to the hardware layer).  A
+  cache written on one device kind is **ignored** on another: winners are
+  measurements, not portable facts.
+* :class:`AutotuneCache` — one JSON file per device signature under
+  ``$REPRO_AUTOTUNE_CACHE`` (default ``~/.cache/repro_autotune``).
+  Writes are atomic (tmp + ``os.replace``); a corrupt or foreign-device
+  file is ignored at open and overwritten on the next flush.
+* :func:`autotune_flash_attention` / :func:`autotune_ssd_scan` — sweep
+  candidate block shapes on the *real* kernel + arrays, best-of-``repeats``
+  wall time, persist the winner.
+* :func:`tuned_flash_blocks` / :func:`tuned_ssd_chunk` — the transparent
+  consultation path: ``repro.kernels.flash_attention(...)`` with blocks
+  omitted resolves them here (cache hit → tuned blocks, miss → the 128
+  defaults; set ``REPRO_AUTOTUNE=1`` to tune on miss instead of
+  defaulting).
+
+The pad-and-mask kernel wrappers accept any sequence length, so the
+sweep is free to propose blocks that do not divide the input — padding
+waste is simply part of what the timing measures.
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import threading
+import time
+from pathlib import Path
+from typing import Any, Callable, Iterable, Sequence
+
+__all__ = [
+    "AutotuneCache", "TuneResult", "device_signature", "default_cache",
+    "autotune_flash_attention", "autotune_ssd_scan",
+    "tuned_flash_blocks", "tuned_ssd_chunk",
+    "flash_block_candidates", "ssd_chunk_candidates",
+]
+
+_ENV_CACHE_DIR = "REPRO_AUTOTUNE_CACHE"
+_ENV_AUTOTUNE = "REPRO_AUTOTUNE"
+_DEFAULT_DIR = "~/.cache/repro_autotune"
+
+#: the hard-coded defaults the autotuner has to beat
+DEFAULT_FLASH_BLOCKS = {"q_block": 128, "kv_block": 128}
+DEFAULT_SSD_CHUNK = 128
+
+
+def device_signature() -> str:
+    """``platform:device_kind:core_count`` for the default jax backend."""
+    import jax
+
+    dev = jax.devices()[0]
+    kind = getattr(dev, "device_kind", "") or "unknown"
+    return f"{dev.platform}:{kind}:{jax.device_count()}"
+
+
+# --------------------------------------------------------------------------
+# persistent cache
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class TuneResult:
+    """One sweep's verdict: the winning blocks and the evidence."""
+    blocks: dict[str, int]
+    us: float                      # best-of-N for the winner
+    default_us: float              # same measurement for the 128 defaults
+    sweep: list[dict[str, Any]]    # every candidate: {blocks, us}
+
+    @property
+    def speedup(self) -> float:
+        return self.default_us / self.us if self.us else 0.0
+
+
+class AutotuneCache:
+    """On-disk map ``(kernel, shape-key) -> winning blocks``, scoped to one
+    device signature.
+
+    The file layout is one JSON per signature (filename = short sha of the
+    signature) holding ``{"device_signature": ..., "entries": {...}}``.
+    ``load`` ignores files whose recorded signature differs from the
+    current one — e.g. a cache directory copied over from a TPU host is
+    never consulted on a CPU container — and ignores unparseable files
+    (a crash mid-write before the atomic rename cannot produce one, but a
+    truncated copy can).
+    """
+
+    def __init__(self, directory: str | os.PathLike | None = None, *,
+                 signature: str | None = None):
+        if directory is None:
+            directory = os.environ.get(_ENV_CACHE_DIR, _DEFAULT_DIR)
+        self.directory = Path(directory).expanduser()
+        self.signature = signature or device_signature()
+        digest = hashlib.sha256(self.signature.encode()).hexdigest()[:16]
+        self.path = self.directory / f"autotune-{digest}.json"
+        self._lock = threading.Lock()
+        self._entries: dict[str, dict[str, Any]] = self._load()
+
+    def _load(self) -> dict[str, dict[str, Any]]:
+        try:
+            data = json.loads(self.path.read_text())
+        except (OSError, ValueError):
+            return {}
+        if not isinstance(data, dict):
+            return {}
+        if data.get("device_signature") != self.signature:
+            # foreign-device cache at our path (hash collision or a copied
+            # directory): measurements from other hardware are not verdicts
+            return {}
+        entries = data.get("entries")
+        if not isinstance(entries, dict):
+            return {}
+        # drop individually corrupt entries instead of trusting them
+        good = {}
+        for key, ent in entries.items():
+            if (isinstance(ent, dict) and isinstance(ent.get("blocks"), dict)
+                    and all(isinstance(v, int)
+                            for v in ent["blocks"].values())):
+                good[key] = ent
+        return good
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def lookup(self, kernel: str, key: str) -> dict[str, int] | None:
+        """Winning blocks for ``key``, or None on miss."""
+        ent = self._entries.get(f"{kernel}|{key}")
+        return dict(ent["blocks"]) if ent else None
+
+    def store(self, kernel: str, key: str, result: TuneResult) -> None:
+        with self._lock:
+            self._entries[f"{kernel}|{key}"] = {
+                "blocks": dict(result.blocks),
+                "us": round(result.us, 2),
+                "default_us": round(result.default_us, 2),
+                "speedup": round(result.speedup, 3),
+                "tuned_at": time.strftime("%Y-%m-%dT%H:%M:%S"),
+            }
+            self._flush_locked()
+
+    def _flush_locked(self) -> None:
+        self.directory.mkdir(parents=True, exist_ok=True)
+        payload = json.dumps(
+            {"device_signature": self.signature, "entries": self._entries},
+            indent=1, sort_keys=True)
+        tmp = self.path.with_name(self.path.name + f".tmp-{os.getpid()}")
+        tmp.write_text(payload)
+        os.replace(tmp, self.path)
+
+
+_default_cache: AutotuneCache | None = None
+_default_cache_lock = threading.Lock()
+
+
+def default_cache() -> AutotuneCache:
+    """Process-wide cache instance (re-created if the env dir changes —
+    tests repoint ``REPRO_AUTOTUNE_CACHE`` at tmp directories)."""
+    global _default_cache
+    want = Path(os.environ.get(_ENV_CACHE_DIR, _DEFAULT_DIR)).expanduser()
+    with _default_cache_lock:
+        if _default_cache is None or _default_cache.directory != want:
+            _default_cache = AutotuneCache(want)
+        return _default_cache
+
+
+# --------------------------------------------------------------------------
+# shape keys and candidate grids
+# --------------------------------------------------------------------------
+def _dtype_name(x: Any) -> str:
+    return str(getattr(x, "dtype", x))
+
+
+def flash_key(bh: int, s: int, sk: int, hd: int, dtype: Any, *,
+              causal: bool, window: int) -> str:
+    return f"bh{bh}_s{s}_sk{sk}_d{hd}_{_dtype_name(dtype)}_c{int(causal)}_w{window}"
+
+
+def ssd_key(bb: int, l: int, h: int, p: int, n: int, dtype: Any) -> str:
+    return f"b{bb}_l{l}_h{h}_p{p}_n{n}_{_dtype_name(dtype)}"
+
+
+def _pow2_upto(n: int, lo: int = 32, hi: int = 512) -> list[int]:
+    out = [c for c in (32, 64, 128, 256, 512) if lo <= c <= min(n, hi)]
+    if n <= hi and n not in out:
+        out.append(n)            # the exact length: zero padding waste
+    return sorted(out) or [n]
+
+
+def flash_block_candidates(s: int, sk: int) -> list[tuple[int, int]]:
+    """(q_block, kv_block) grid: powers of two plus the exact lengths,
+    capped so a score tile stays comfortably inside VMEM."""
+    pairs = [(qb, kb)
+             for qb in _pow2_upto(s) for kb in _pow2_upto(sk)
+             if qb * kb <= 256 * 256]
+    return pairs
+
+
+def ssd_chunk_candidates(l: int) -> list[int]:
+    return _pow2_upto(l)
+
+
+# --------------------------------------------------------------------------
+# measurement
+# --------------------------------------------------------------------------
+def _time_us(fn: Callable[[], Any], repeats: int) -> float:
+    """Best-of-``repeats`` wall time in µs (first call outside the timing
+    loop warms the jit cache for this block config)."""
+    import jax
+
+    jax.block_until_ready(fn())
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn())
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _sweep(run: Callable[[dict[str, int]], Any],
+           candidates: Iterable[dict[str, int]],
+           default_blocks: dict[str, int], repeats: int) -> TuneResult:
+    sweep: list[dict[str, Any]] = []
+    best_blocks, best_us, default_us = dict(default_blocks), float("inf"), 0.0
+    for blocks in candidates:
+        us = _time_us(lambda: run(blocks), repeats)
+        sweep.append({"blocks": dict(blocks), "us": round(us, 2)})
+        if blocks == default_blocks:
+            default_us = us
+        if us < best_us:
+            best_blocks, best_us = dict(blocks), us
+    if not default_us:                      # defaults not in the grid
+        default_us = _time_us(lambda: run(default_blocks), repeats)
+    return TuneResult(blocks=best_blocks, us=best_us,
+                      default_us=default_us, sweep=sweep)
+
+
+def autotune_flash_attention(q: Any, k: Any, v: Any, *, causal: bool = True,
+                             window: int = 0, interpret: bool = False,
+                             cache: AutotuneCache | None = None,
+                             candidates: Sequence[tuple[int, int]] | None = None,
+                             repeats: int = 3) -> TuneResult:
+    """Sweep (q_block, kv_block) on (BH, S, D) arrays; persist the winner."""
+    from repro.kernels.flash_attention import flash_attention_bh
+
+    bh, s, hd = q.shape
+    sk = k.shape[1]
+    pairs = candidates or flash_block_candidates(s, sk)
+
+    def run(blocks: dict[str, int]):
+        return flash_attention_bh(q, k, v, causal=causal, window=window,
+                                  q_block=blocks["q_block"],
+                                  kv_block=blocks["kv_block"],
+                                  interpret=interpret)
+
+    result = _sweep(run, [{"q_block": qb, "kv_block": kb} for qb, kb in pairs],
+                    DEFAULT_FLASH_BLOCKS, repeats)
+    cache = cache or default_cache()
+    cache.store("flash_attention",
+                flash_key(bh, s, sk, hd, q.dtype, causal=causal, window=window),
+                result)
+    return result
+
+
+def autotune_ssd_scan(x: Any, dt: Any, a: Any, b: Any, c: Any, *,
+                      interpret: bool = False,
+                      cache: AutotuneCache | None = None,
+                      candidates: Sequence[int] | None = None,
+                      repeats: int = 3) -> TuneResult:
+    """Sweep the SSD chunk length on model-layout arrays; persist the winner."""
+    from repro.kernels.ssd_scan import ssd_scan_kernel
+
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+    chunks = candidates or ssd_chunk_candidates(l)
+
+    def run(blocks: dict[str, int]):
+        return ssd_scan_kernel(x, dt, a, b, c, chunk=blocks["chunk"],
+                               interpret=interpret)
+
+    result = _sweep(run, [{"chunk": ch} for ch in chunks],
+                    {"chunk": DEFAULT_SSD_CHUNK}, repeats)
+    cache = cache or default_cache()
+    cache.store("ssd_scan", ssd_key(bb, l, h, p, n, x.dtype), result)
+    return result
+
+
+# --------------------------------------------------------------------------
+# transparent consultation (the ops.py entry points call these when the
+# caller omits explicit blocks)
+# --------------------------------------------------------------------------
+def _tune_on_miss() -> bool:
+    return os.environ.get(_ENV_AUTOTUNE, "") == "1"
+
+
+def tuned_flash_blocks(q: Any, k: Any, *, causal: bool, window: int,
+                       interpret: bool = False) -> dict[str, int]:
+    """Blocks for a (BH, S, D) flash call: cache hit → winner; miss → the
+    128 defaults (or a fresh sweep when ``REPRO_AUTOTUNE=1``)."""
+    bh, s, hd = q.shape
+    sk = k.shape[1]
+    cache = default_cache()
+    key = flash_key(bh, s, sk, hd, q.dtype, causal=causal, window=window)
+    hit = cache.lookup("flash_attention", key)
+    if hit is not None:
+        return hit
+    if _tune_on_miss():
+        import jax.numpy as jnp
+
+        v = jnp.zeros_like(k)
+        return autotune_flash_attention(
+            q, k, v, causal=causal, window=window, interpret=interpret,
+            cache=cache).blocks
+    return dict(DEFAULT_FLASH_BLOCKS)
+
+
+def tuned_ssd_chunk(x: Any, b: Any, *, interpret: bool = False) -> int:
+    """Chunk length for a model-layout SSD call (same contract as
+    :func:`tuned_flash_blocks`)."""
+    bb, l, h, p = x.shape
+    n = b.shape[-1]
+    cache = default_cache()
+    key = ssd_key(bb, l, h, p, n, x.dtype)
+    hit = cache.lookup("ssd_scan", key)
+    if hit is not None:
+        return hit["chunk"]
+    if _tune_on_miss():
+        import jax.numpy as jnp
+
+        dt = jnp.full((bb, l, h), 0.5, x.dtype)
+        a = jnp.full((h,), -0.5, x.dtype)
+        c = jnp.zeros_like(b)
+        return autotune_ssd_scan(x, dt, a, b, c, interpret=interpret,
+                                 cache=cache).blocks["chunk"]
+    return DEFAULT_SSD_CHUNK

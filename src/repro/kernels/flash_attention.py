@@ -29,7 +29,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
             qb: int, kb: int, hd: int, causal: bool, window: int,
-            nk: int, scale: float):
+            nk: int, scale: float, kv_valid: int):
     i = pl.program_id(1)          # q block
     j = pl.program_id(2)          # kv block (sequential)
 
@@ -53,6 +53,11 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
         mask &= k_pos <= q_pos
     if window:
         mask &= k_pos > q_pos - window
+    if kv_valid:
+        # kv padded up to a block multiple: positions past the true length
+        # contribute nothing (padded *q* rows need no mask — their output
+        # is sliced off, and the online-softmax rescale keeps them finite)
+        mask &= k_pos < kv_valid
     scores = jnp.where(mask, scores, NEG_INF)
 
     m_prev = m_ref[:, 0][:, None]                      # (qb, 1)
@@ -78,20 +83,31 @@ def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        causal: bool = True, window: int = 0,
                        q_block: int = 128, kv_block: int = 128,
                        interpret: bool = False) -> jax.Array:
-    """q, k, v: (BH, S, D) with equal head counts (GQA expanded by caller)."""
+    """q, k, v: (BH, S, D) with equal head counts (GQA expanded by caller).
+
+    Sequence lengths need not divide the block sizes: q/kv are zero-padded
+    up to the next block multiple (the kernel masks padded kv positions;
+    padded q rows are sliced off the output), so autotuned blocks work for
+    arbitrary lengths.
+    """
     bh, s, hd = q.shape
     sk = k.shape[1]
     qb = min(q_block, s)
     kb = min(kv_block, sk)
-    if s % qb or sk % kb:
-        raise ValueError(f"seq {s}/{sk} not divisible by blocks {qb}/{kb}")
-    nq, nk = s // qb, sk // kb
+    s_pad = -(-s // qb) * qb
+    sk_pad = -(-sk // kb) * kb
+    if s_pad != s:
+        q = jnp.pad(q, ((0, 0), (0, s_pad - s), (0, 0)))
+    if sk_pad != sk:
+        k = jnp.pad(k, ((0, 0), (0, sk_pad - sk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, sk_pad - sk), (0, 0)))
+    nq, nk = s_pad // qb, sk_pad // kb
     scale = 1.0 / math.sqrt(hd)
 
     kernel = functools.partial(
         _kernel, qb=qb, kb=kb, hd=hd, causal=causal, window=window,
-        nk=nk, scale=scale)
-    return pl.pallas_call(
+        nk=nk, scale=scale, kv_valid=sk if sk_pad != sk else 0)
+    out = pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
@@ -100,7 +116,7 @@ def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
             pl.BlockSpec((1, kb, hd), lambda b, i, j: (b, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, qb, hd), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, hd), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, s_pad, hd), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((qb, hd), jnp.float32),
             pltpu.VMEM((qb, 128), jnp.float32),
@@ -110,3 +126,4 @@ def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(q, k, v)
+    return out[:, :s] if s_pad != s else out

@@ -4,6 +4,13 @@
 (kv heads ≤ q heads) and handles head expansion + folding; ``ssd_scan``
 matches the signature of the pure-JAX ``repro.models.ssm.ssd_scan``.
 
+Block sizes are optional: when the caller omits them, the persistent
+autotune cache (``repro.kernels.autotune``) is consulted for this device
+signature and input shape — a hit uses the measured winner, a miss falls
+back to the 128-block defaults (or sweeps on the spot under
+``REPRO_AUTOTUNE=1``).  Sequence lengths that do not divide the blocks
+are handled by the kernels' pad-and-mask path.
+
 On this CPU container the kernels run with ``interpret=True`` (Pallas
 executes the kernel body in Python); on TPU pass ``interpret=False``.
 """
@@ -12,13 +19,14 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import tuned_flash_blocks, tuned_ssd_chunk
 from repro.kernels.flash_attention import flash_attention_bh
 from repro.kernels.ssd_scan import ssd_scan_kernel
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
-                    q_block: int = 128, kv_block: int = 128,
+                    q_block: int | None = None, kv_block: int | None = None,
                     interpret: bool = False) -> jax.Array:
     """q: (B, S, H, D); k, v: (B, S, KV, D) -> (B, S, H, D)."""
     b, s, h, d = q.shape
@@ -30,6 +38,11 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
     kf = k.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
     vf = v.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    if q_block is None or kv_block is None:
+        tuned = tuned_flash_blocks(qf, kf, causal=causal, window=window,
+                                   interpret=interpret)
+        q_block = q_block or tuned["q_block"]
+        kv_block = kv_block or tuned["kv_block"]
     of = flash_attention_bh(qf, kf, vf, causal=causal, window=window,
                             q_block=q_block, kv_block=kv_block,
                             interpret=interpret)
@@ -37,10 +50,12 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
 
 def ssd_scan(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
-             c: jax.Array, *, chunk: int = 128,
+             c: jax.Array, *, chunk: int | None = None,
              interpret: bool = False) -> tuple[jax.Array, jax.Array]:
     """Grouped (G=1) SSD scan; see ssd_scan_kernel for shapes."""
     if b.ndim == 4:                         # (B, L, G, N) with G == 1
         b = b[:, :, 0]
         c = c[:, :, 0]
+    if chunk is None:
+        chunk = tuned_ssd_chunk(x, b, interpret=interpret)
     return ssd_scan_kernel(x, dt, a, b, c, chunk=chunk, interpret=interpret)

@@ -83,13 +83,22 @@ def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
     """x: (B, L, H, P); dt: (B, L, H); a: (H,); b, c: (B, L, N).
 
     Returns (y (B, L, H, P), final_state (B, H, P, N)).
+
+    L need not divide the chunk size: inputs are zero-padded up to the
+    next chunk multiple.  Padded steps have dt = 0, so da = 0 — they decay
+    the carried state by exp(0) = 1 and contribute x·dt = 0, i.e. they are
+    exact identities on the recurrence; padded y rows are sliced off.
     """
     bb, l, h, p = x.shape
     n = b.shape[-1]
     q = min(chunk, l)
-    if l % q:
-        raise ValueError(f"L={l} not divisible by chunk={q}")
-    nc = l // q
+    l_pad = -(-l // q) * q
+    if l_pad != l:
+        x = jnp.pad(x, ((0, 0), (0, l_pad - l), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, l_pad - l), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, l_pad - l), (0, 0)))
+        c = jnp.pad(c, ((0, 0), (0, l_pad - l), (0, 0)))
+    nc = l_pad // q
 
     kernel = functools.partial(_kernel, q=q, p=p, n=n, nc=nc)
     y, state = pl.pallas_call(
@@ -107,7 +116,7 @@ def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             pl.BlockSpec((1, 1, p, n), lambda bi, hi, ci: (bi, hi, 0, 0)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((bb, l, h, p), x.dtype),
+            jax.ShapeDtypeStruct((bb, l_pad, h, p), x.dtype),
             jax.ShapeDtypeStruct((bb, h, p, n), x.dtype),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
@@ -115,4 +124,4 @@ def ssd_scan_kernel(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, dt, a, b, c)
-    return y, state
+    return (y[:, :l] if l_pad != l else y), state

@@ -1,5 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+from repro.launch.xla_flags import merged_flags
+
+os.environ["XLA_FLAGS"] = merged_flags("dryrun", os.environ.get("XLA_FLAGS", ""),
+                                       platform="cpu")
 
 """Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
 
@@ -9,8 +13,10 @@ on the 16×16 single-pod mesh AND the 2×16×16 multi-pod mesh, and the
 compiled artifact yields ``memory_analysis()`` (fits-in-HBM proof) and
 ``cost_analysis()`` + HLO collectives (roofline terms, §Roofline).
 
-The two lines above MUST stay first: jax locks the device count on first
-initialization.
+The ``XLA_FLAGS`` assignment above MUST stay first (before any jax
+import): jax locks the device count on first initialization.  The flag
+set itself (``--xla_force_host_platform_device_count=512``) lives in
+``repro.launch.xla_flags`` with the other tuned per-platform profiles.
 
 Usage:
     python -m repro.launch.dryrun --arch granite-3-2b --shape train_4k

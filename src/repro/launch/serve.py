@@ -11,10 +11,15 @@ import json
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_smoke_config
+from repro.launch.xla_flags import apply_xla_flags
 from repro.serve import Request, WrathServeDriver
 
 
 def main() -> None:
+    # tuned compiler flags (repro.launch.xla_flags) must be in the
+    # environment before the jax backend initializes — importing jax
+    # above does not initialize it, the first computation does
+    apply_xla_flags("serve")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b",
                     help=f"one of {', '.join(a.replace('_', '-') for a in ARCH_IDS)}")

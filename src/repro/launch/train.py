@@ -18,6 +18,7 @@ import json
 from repro.configs import ARCH_IDS, get_smoke_config
 from repro.engine.policies import WrathPolicy, replay
 from repro.engine.scheduler import SCHEDULERS, make_scheduler
+from repro.launch.xla_flags import apply_xla_flags
 from repro.optim import OptConfig
 from repro.train import TrainEvent, WrathTrainSupervisor
 
@@ -33,6 +34,10 @@ def parse_event(spec: str) -> TrainEvent:
 
 
 def main() -> None:
+    # tuned compiler flags (repro.launch.xla_flags) must be in the
+    # environment before the jax backend initializes — importing jax
+    # above does not initialize it, the first computation does
+    apply_xla_flags("train")
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="granite-3-2b",
                     help=f"one of {', '.join(a.replace('_', '-') for a in ARCH_IDS)}")

@@ -1,0 +1,126 @@
+"""Centralized tuned XLA compiler-flag sets per platform and workload.
+
+The saxml ``llm_xla_flags.py`` idiom: instead of every launcher inlining
+its own ``os.environ["XLA_FLAGS"]`` assignment, the tuned flag sets live
+in one table keyed by *profile* (train / serve / dryrun) and the
+launchers call :func:`apply_xla_flags` before jax initializes its
+backend.
+
+Rules:
+
+* This module must never import jax — flags only take effect if they are
+  in the environment before the backend initializes, so the callers
+  import this first (``dryrun.py`` calls it before ``import jax``).
+* Platform-specific flags are applied only on that platform: XLA aborts
+  on unrecognized flags, so TPU collective-overlap flags must not reach
+  a CPU-backed process.  Detection is environment-based (``JAX_PLATFORMS``
+  / libtpu markers) because importing jax to ask is self-defeating.
+* User-provided ``XLA_FLAGS`` win: anything already in the variable is
+  appended *after* the profile set (XLA's flag parser is last-wins), and
+  a flag the user already set is dropped from the profile side.
+"""
+from __future__ import annotations
+
+import os
+
+__all__ = ["FLAG_SETS", "detect_platform", "flag_string", "merged_flags",
+           "apply_xla_flags"]
+
+#: async-collective overlap set shared by the TPU profiles (the saxml
+#: serving/training defaults): fuse all-gathers/all-reduces with the
+#: compute they overlap, and let data-parallel ops of different sizes
+#: share a fusion.
+_TPU_OVERLAP = {
+    "--xla_tpu_enable_async_collective_fusion": "true",
+    "--xla_tpu_enable_async_collective_fusion_fuse_all_gather": "true",
+    "--xla_tpu_enable_async_collective_fusion_multiple_steps": "true",
+    "--xla_tpu_overlap_compute_collective_tc": "true",
+    "--xla_enable_async_all_gather": "true",
+    "--xla_tpu_data_parallel_opt_different_sized_ops": "true",
+}
+
+#: profile -> platform -> {flag: value}.  Flags are spelled with their
+#: leading dashes so the table reads like the command line it becomes.
+FLAG_SETS: dict[str, dict[str, dict[str, str]]] = {
+    # training: collective overlap + latency-hiding scheduler
+    "train": {
+        "tpu": {
+            **_TPU_OVERLAP,
+            "--xla_latency_hiding_scheduler_rerun": "1",
+        },
+        "cpu": {},
+    },
+    # serving: overlap plus the unsafe-rng speedup saxml ships for
+    # decode (sampling tolerates the relaxed SPMD rng contract)
+    "serve": {
+        "tpu": {
+            **_TPU_OVERLAP,
+            "--xla_tpu_spmd_rng_bit_generator_unsafe": "true",
+        },
+        "cpu": {},
+    },
+    # compile-only dry-run: fake a 512-chip host topology; jax locks the
+    # device count on first initialization, so this must be applied
+    # before any jax import in the process
+    "dryrun": {
+        "cpu": {"--xla_force_host_platform_device_count": "512"},
+        "tpu": {},
+    },
+}
+
+
+def detect_platform() -> str:
+    """Best-effort platform without importing jax: explicit
+    ``JAX_PLATFORMS`` wins, then TPU environment markers, else cpu."""
+    plats = os.environ.get("JAX_PLATFORMS", "")
+    if plats:
+        return plats.split(",")[0].strip().lower() or "cpu"
+    if os.environ.get("TPU_NAME") or os.path.exists("/dev/accel0"):
+        return "tpu"
+    return "cpu"
+
+
+def flag_string(profile: str, *, platform: str | None = None,
+                extra: dict[str, str] | None = None) -> str:
+    """The ``XLA_FLAGS`` value for ``profile`` on ``platform``."""
+    platform = platform or detect_platform()
+    try:
+        flags = dict(FLAG_SETS[profile].get(platform, {}))
+    except KeyError:
+        raise ValueError(
+            f"unknown XLA flag profile {profile!r}; "
+            f"one of {sorted(FLAG_SETS)}") from None
+    if extra:
+        flags.update(extra)
+    return " ".join(f"{k}={v}" for k, v in flags.items())
+
+
+def merged_flags(profile: str, existing: str = "", *,
+                 platform: str | None = None,
+                 extra: dict[str, str] | None = None) -> str:
+    """Profile flags merged with an ``existing`` XLA_FLAGS value.
+
+    Existing flags are appended after the profile set (last-wins in
+    XLA's parser) and suppress the profile's value for the same flag —
+    a user override always survives.
+    """
+    old = existing.split()
+    old_names = {tok.split("=", 1)[0] for tok in old}
+    ours = [tok for tok in flag_string(profile, platform=platform,
+                                       extra=extra).split()
+            if tok.split("=", 1)[0] not in old_names]
+    return " ".join(ours + old).strip()
+
+
+def apply_xla_flags(profile: str, *, platform: str | None = None,
+                    extra: dict[str, str] | None = None,
+                    env: os._Environ | dict = os.environ) -> str:
+    """Set ``XLA_FLAGS`` for ``profile``, preserving user-set flags.
+
+    Returns the final string; call before jax's backend initializes.
+    """
+    merged = merged_flags(profile, env.get("XLA_FLAGS", ""),
+                          platform=platform, extra=extra)
+    if merged:
+        env["XLA_FLAGS"] = merged
+    return merged

@@ -1,0 +1,190 @@
+"""Autotune plane: persistent cache semantics (roundtrip, reopen,
+corruption, device-signature scoping) and transparent consultation from
+the public kernel entry points.  All sweeps run in interpret mode on
+tiny shapes with a small candidate grid to stay fast."""
+import json
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.autotune import (
+    DEFAULT_FLASH_BLOCKS,
+    DEFAULT_SSD_CHUNK,
+    AutotuneCache,
+    TuneResult,
+    autotune_flash_attention,
+    autotune_ssd_scan,
+    device_signature,
+    flash_block_candidates,
+    ssd_chunk_candidates,
+    tuned_flash_blocks,
+    tuned_ssd_chunk,
+)
+
+KEY = jax.random.PRNGKey(3)
+
+
+def _result(blocks, us=10.0, default_us=20.0):
+    return TuneResult(blocks=blocks, us=us, default_us=default_us, sweep=[])
+
+
+def _flash_args(bh=2, s=64, d=16):
+    q = jax.random.normal(KEY, (bh, s, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 1), (bh, s, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 2), (bh, s, d))
+    return q, k, v
+
+
+def _ssd_args(b=1, l=64, h=1, p=4, n=8):
+    x = jax.random.normal(KEY, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3), (b, l, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, l, n))
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, l, n))
+    return x, dt, a, bm, cm
+
+
+# ------------------------------------------------------------ cache ----
+def test_cache_roundtrip_and_reopen(tmp_path):
+    c = AutotuneCache(tmp_path)
+    assert c.lookup("flash_attention", "k1") is None
+    c.store("flash_attention", "k1", _result({"q_block": 256, "kv_block": 64}))
+    assert c.lookup("flash_attention", "k1") == {"q_block": 256, "kv_block": 64}
+    # a second instance on the same directory sees the persisted entry
+    c2 = AutotuneCache(tmp_path)
+    assert c2.lookup("flash_attention", "k1") == {"q_block": 256, "kv_block": 64}
+    # kernels do not share a namespace
+    assert c2.lookup("ssd_scan", "k1") is None
+
+
+def test_cache_corrupt_file_ignored_and_recovered(tmp_path):
+    c = AutotuneCache(tmp_path)
+    c.store("ssd_scan", "k", _result({"chunk": 32}))
+    c.path.write_text("{ not json")
+    c2 = AutotuneCache(tmp_path)
+    assert len(c2) == 0 and c2.lookup("ssd_scan", "k") is None
+    # the next store overwrites the corrupt file atomically
+    c2.store("ssd_scan", "k", _result({"chunk": 64}))
+    assert AutotuneCache(tmp_path).lookup("ssd_scan", "k") == {"chunk": 64}
+
+
+def test_cache_corrupt_entry_dropped_individually(tmp_path):
+    c = AutotuneCache(tmp_path)
+    c.store("flash_attention", "good", _result({"q_block": 128, "kv_block": 128}))
+    data = json.loads(c.path.read_text())
+    data["entries"]["flash_attention|bad"] = {"blocks": "not-a-dict"}
+    data["entries"]["flash_attention|bad2"] = ["wrong-shape"]
+    c.path.write_text(json.dumps(data))
+    c2 = AutotuneCache(tmp_path)
+    assert c2.lookup("flash_attention", "good") is not None
+    assert c2.lookup("flash_attention", "bad") is None
+    assert c2.lookup("flash_attention", "bad2") is None
+
+
+def test_foreign_device_cache_ignored(tmp_path):
+    """A cache written under another device signature is never consulted:
+    block winners are measurements on specific hardware, not facts."""
+    foreign = AutotuneCache(tmp_path, signature="tpu:TPU v5e:256")
+    foreign.store("flash_attention", "k", _result({"q_block": 512, "kv_block": 512}))
+    local = AutotuneCache(tmp_path)          # real (cpu) signature
+    # separate per-signature files: the foreign entry is invisible
+    assert local.lookup("flash_attention", "k") is None
+    # even a byte-identical copy dropped onto the local path (a copied
+    # cache directory, a hash collision) is rejected by the recorded
+    # signature inside the file
+    shutil.copy(foreign.path, local.path)
+    relocated = AutotuneCache(tmp_path)
+    assert len(relocated) == 0
+    assert relocated.lookup("flash_attention", "k") is None
+
+
+def test_device_signature_shape():
+    sig = device_signature()
+    platform, kind, count = sig.split(":", 2)
+    assert platform and kind and int(count.split(":")[-1]) >= 1
+
+
+def test_candidate_grids():
+    pairs = flash_block_candidates(320, 320)
+    assert (128, 128) in pairs and (320, 128) in pairs
+    assert all(qb * kb <= 256 * 256 for qb, kb in pairs)
+    chunks = ssd_chunk_candidates(160)
+    assert 128 in chunks and 160 in chunks and 512 not in chunks
+
+
+# ------------------------------------------------- sweep + persistence ----
+def test_autotune_flash_persists_winner(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    q, k, v = _flash_args()
+    res = autotune_flash_attention(
+        q, k, v, interpret=True, repeats=1,
+        candidates=[(32, 32), (64, 64)])
+    assert res.blocks in ({"q_block": 32, "kv_block": 32},
+                          {"q_block": 64, "kv_block": 64})
+    assert res.us > 0 and res.default_us > 0 and len(res.sweep) == 2
+    # the transparent path now resolves to the persisted winner
+    assert tuned_flash_blocks(q, k, causal=True, window=0) == res.blocks
+
+
+def test_autotune_ssd_persists_winner(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    x, dt, a, bm, cm = _ssd_args()
+    res = autotune_ssd_scan(x, dt, a, bm, cm, interpret=True, repeats=1,
+                            candidates=[16, 32])
+    assert res.blocks["chunk"] in (16, 32)
+    assert tuned_ssd_chunk(x, bm) == res.blocks["chunk"]
+
+
+def test_transparent_miss_falls_back_to_defaults(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    monkeypatch.delenv("REPRO_AUTOTUNE", raising=False)
+    q, k, _ = _flash_args()
+    assert tuned_flash_blocks(q, k, causal=True, window=0) == DEFAULT_FLASH_BLOCKS
+    x, _, _, bm, _ = _ssd_args()
+    assert tuned_ssd_chunk(x, bm) == DEFAULT_SSD_CHUNK
+
+
+def test_transparent_consultation_preserves_numerics(tmp_path, monkeypatch):
+    """flash_attention with blocks omitted (cache-tuned) must equal the
+    explicit-blocks call bit-for-bit aside from fp reassociation."""
+    from repro.kernels import flash_attention
+
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    b, s, h, d = 1, 64, 2, 16
+    q = jax.random.normal(KEY, (b, s, h, d))
+    k = jax.random.normal(jax.random.fold_in(KEY, 7), (b, s, h, d))
+    v = jax.random.normal(jax.random.fold_in(KEY, 8), (b, s, h, d))
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    autotune_flash_attention(qf, kf, vf, interpret=True, repeats=1,
+                             candidates=[(32, 32)])
+    tuned_out = flash_attention(q, k, v, interpret=True)       # cache hit
+    explicit = flash_attention(q, k, v, q_block=32, kv_block=32,
+                               interpret=True)
+    np.testing.assert_allclose(np.asarray(tuned_out), np.asarray(explicit),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_autotune_on_miss_env_gate(tmp_path, monkeypatch):
+    """REPRO_AUTOTUNE=1: a cache miss sweeps on the spot and persists."""
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    monkeypatch.setenv("REPRO_AUTOTUNE", "1")
+    x, _, _, bm, _ = _ssd_args(l=32)
+    chunk = tuned_ssd_chunk(x, bm, interpret=True)
+    assert chunk in ssd_chunk_candidates(32)
+    cache = AutotuneCache(tmp_path)
+    assert len(cache) == 1
+
+
+def test_sweep_checks_default_when_not_in_grid(tmp_path, monkeypatch):
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", str(tmp_path))
+    q, k, v = _flash_args(s=32)
+    res = autotune_flash_attention(q, k, v, interpret=True, repeats=1,
+                                   candidates=[(16, 16)])
+    # the 128 defaults were measured out-of-grid for the before/after row
+    assert res.default_us > 0
+    assert res.speedup == pytest.approx(res.default_us / res.us)

@@ -68,6 +68,50 @@ def test_flash_attention_noncausal():
                                rtol=1e-4, atol=1e-4)
 
 
+@pytest.mark.parametrize("s", [130, 200, 320])
+def test_flash_attention_non_multiple_seq(s):
+    """Pad-and-mask path: sequence lengths that do not divide the default
+    128 blocks must match the dense oracle exactly (padded kv positions
+    masked, padded q rows sliced off)."""
+    q, k, v = _qkv(1, s, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, q_block=128, kv_block=128,
+                          interpret=True)
+    ref = _ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_non_multiple_noncausal():
+    """Non-causal is the case where the kv-padding mask is load-bearing:
+    without it every valid q row would attend to the zero-padded keys."""
+    q, k, v = _qkv(1, 200, 2, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=False, q_block=128, kv_block=128,
+                          interpret=True)
+    ref = _ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_non_multiple_gqa_window():
+    q, k, v = _qkv(2, 160, 4, 2, 64, jnp.float32)
+    out = flash_attention(q, k, v, causal=True, window=64, q_block=128,
+                          kv_block=128, interpret=True)
+    ref = _ref(q, k, v, causal=True, window=64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_flash_attention_block_invariance_non_multiple():
+    """Autotuned (non-dividing) block choices cannot change the math."""
+    q, k, v = _qkv(1, 320, 2, 2, 64, jnp.float32)
+    a = flash_attention(q, k, v, causal=True, q_block=128, kv_block=128,
+                        interpret=True)
+    b = flash_attention(q, k, v, causal=True, q_block=64, kv_block=320,
+                        interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                               atol=1e-5)
+
+
 def test_flash_attention_block_size_invariance():
     q, k, v = _qkv(1, 512, 2, 2, 64, jnp.float32)
     a = flash_attention(q, k, v, causal=True, q_block=128, kv_block=128,
@@ -121,6 +165,25 @@ def test_ssd_kernel_matches_model_ssd_scan():
                                rtol=2e-3, atol=2e-3)
     np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_m),
                                rtol=2e-3, atol=2e-3)
+
+
+@pytest.mark.parametrize("l,chunk", [(100, 64), (200, 128), (130, 32)])
+def test_ssd_scan_non_multiple_seq(l, chunk):
+    """Chunk padding path: padded steps carry dt = 0, an exact identity
+    on the recurrence, so any L works with any chunk size."""
+    b, h, p, n = 2, 2, 16, 32
+    x = jax.random.normal(KEY, (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(jax.random.fold_in(KEY, 3),
+                                           (b, l, h)))
+    a = -jnp.exp(jax.random.normal(jax.random.fold_in(KEY, 4), (h,)) * 0.3)
+    bm = jax.random.normal(jax.random.fold_in(KEY, 5), (b, l, n))
+    cm = jax.random.normal(jax.random.fold_in(KEY, 6), (b, l, n))
+    y, st = ssd_scan(x, dt, a, bm, cm, chunk=chunk, interpret=True)
+    yr, sr = ssd_ref(x, dt, a, bm, cm)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(yr), rtol=2e-3,
+                               atol=2e-3)
+    np.testing.assert_allclose(np.asarray(st), np.asarray(sr), rtol=2e-3,
+                               atol=2e-3)
 
 
 def test_ssd_chunk_invariance():

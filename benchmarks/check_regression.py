@@ -34,8 +34,13 @@ from pathlib import Path
 
 
 def compare(baseline: dict, fresh: dict, *, suffix: str,
-            tolerance: float) -> tuple[list[str], list[str]]:
-    """Returns (regressions, missing) message lists."""
+            tolerance: float, lower: bool = False) -> tuple[list[str], list[str]]:
+    """Returns (regressions, missing) message lists.
+
+    ``lower=True`` flips the direction for lower-is-better metrics
+    (latency percentiles): the fresh value may not exceed the baseline by
+    more than ``tolerance``.
+    """
     regressions: list[str] = []
     missing: list[str] = []
     for key, base_val in sorted(baseline.get("metrics", {}).items()):
@@ -45,11 +50,18 @@ def compare(baseline: dict, fresh: dict, *, suffix: str,
         if new_val is None:
             missing.append(f"{key}: in baseline but absent from fresh run")
             continue
-        floor = base_val * (1.0 - tolerance)
-        if new_val < floor:
-            regressions.append(
-                f"{key}: {new_val:.0f} < {floor:.0f} "
-                f"(baseline {base_val:.0f}, tolerance {tolerance:.0%})")
+        if lower:
+            ceiling = base_val * (1.0 + tolerance)
+            if new_val > ceiling:
+                regressions.append(
+                    f"{key}: {new_val:.4g} > {ceiling:.4g} "
+                    f"(baseline {base_val:.4g}, tolerance {tolerance:.0%})")
+        else:
+            floor = base_val * (1.0 - tolerance)
+            if new_val < floor:
+                regressions.append(
+                    f"{key}: {new_val:.4g} < {floor:.4g} "
+                    f"(baseline {base_val:.4g}, tolerance {tolerance:.0%})")
     return regressions, missing
 
 
@@ -64,6 +76,10 @@ def main(argv: list[str] | None = None) -> int:
     ap.add_argument("--metric", action="append", default=None,
                     help="metric suffix to gate on (repeatable; default "
                          "tasks_per_sec)")
+    ap.add_argument("--lower-metric", action="append", default=None,
+                    help="lower-is-better metric suffix to gate on "
+                         "(repeatable; e.g. p99_ms — fails when the fresh "
+                         "value exceeds baseline by more than tolerance)")
     ap.add_argument("--tolerance",
                     type=float,
                     default=float(os.environ.get("BENCH_TOLERANCE", "0.20")),
@@ -76,12 +92,18 @@ def main(argv: list[str] | None = None) -> int:
     if fresh.get("error"):
         print(f"REGRESSION GATE: fresh run errored: {fresh['error']}")
         return 1
-    metrics = args.metric or ["tasks_per_sec"]
+    metrics = args.metric or ([] if args.lower_metric else ["tasks_per_sec"])
+    lower_metrics = args.lower_metric or []
     regressions: list[str] = []
     missing: list[str] = []
     for suffix in metrics:
         reg, mis = compare(baseline, fresh, suffix=suffix,
                            tolerance=args.tolerance)
+        regressions += reg
+        missing += mis
+    for suffix in lower_metrics:
+        reg, mis = compare(baseline, fresh, suffix=suffix,
+                           tolerance=args.tolerance, lower=True)
         regressions += reg
         missing += mis
     for msg in regressions:
@@ -92,7 +114,8 @@ def main(argv: list[str] | None = None) -> int:
         return 1
     if missing:
         return 2
-    print(f"regression gate ok: every *.{{{','.join(metrics)}}} within "
+    gated = ",".join(metrics + [f"{m}(lower)" for m in lower_metrics])
+    print(f"regression gate ok: every *.{{{gated}}} within "
           f"{args.tolerance:.0%} of {args.baseline}")
     return 0
 

@@ -26,6 +26,7 @@ from benchmarks import (
     fig8_failure_rate,
     kernels,
     roofline,
+    serve,
     table4_success_rates,
     train_recovery,
 )
@@ -42,6 +43,7 @@ SUITES = {
     "fig7": fig7_overhead_scaling.run,
     "fig8": fig8_failure_rate.run,
     "roofline": roofline.run,
+    "serve": serve.run,
     "train_recovery": train_recovery.run,
 }
 

@@ -1,0 +1,119 @@
+"""Serving-plane benchmark: static vs continuous batching, SLO admission,
+chaos p99, autoscaling — all on the simulated decode backend under a
+virtual clock, so every number is **deterministic**: the committed
+``BENCH_serve.json`` baseline matches a CI re-run bit for bit and the
+regression gate can be tight.
+
+Rows (metrics in the derived field):
+
+* ``serve_static``      — the synchronous static batcher baseline.
+* ``serve_continuous``  — same workload, same replica count, continuous
+  batching; ``speedup_vs_static`` is the headline (slot refill at step
+  boundaries + all replicas decoding concurrently).
+* ``serve_chaos``       — a replica killed mid-traffic; the metric that
+  matters is ``p99_ms`` staying bounded while every request completes.
+* ``serve_admission``   — overload with per-request deadlines; rejected
+  requests must consume **zero** decode steps (fast-fail at the door).
+* ``serve_autoscale``   — bursty arrivals against a 1-replica floor; the
+  autoscaler grows into the burst and shrinks back after it drains.
+"""
+from __future__ import annotations
+
+import random
+
+from repro.core import MonitoringDatabase
+from repro.serve import (ReplicaAutoscaler, ServeRequest, SLOAdmissionPolicy,
+                         WrathServeDriver)
+from repro.serve.batcher import SimDecodeBackend
+from repro.sim.clock import VirtualClock
+
+STEP_S = 0.02          # modeled decode-step cost at replica speed 1.0
+REPLICAS = 3
+MAX_BATCH = 4
+
+
+def _workload(n: int, *, deadline_s: float | None = None,
+              seed: int = 0) -> list[ServeRequest]:
+    """Mixed-length workload: short and long requests interleaved, so the
+    static batcher pays real head-of-line blocking."""
+    rng = random.Random(seed)
+    return [ServeRequest(
+        rid=i,
+        prompt=[rng.randrange(256) for _ in range(rng.randint(2, 6))],
+        max_new_tokens=rng.randint(2, 12),
+        deadline_s=deadline_s) for i in range(n)]
+
+
+def _driver(n_replicas: int = REPLICAS, **kw) -> WrathServeDriver:
+    clock = VirtualClock()
+    return WrathServeDriver(None, n_replicas=n_replicas, max_batch=MAX_BATCH,
+                            clock=clock,
+                            monitor=MonitoringDatabase(clock=clock),
+                            decode=SimDecodeBackend(step_s=STEP_S), **kw)
+
+
+def run():
+    # -- static baseline -------------------------------------------------
+    driver = _driver()
+    reqs = _workload(60)
+    rep = driver.serve(reqs)
+    static_rps = rep.requests_per_s
+    yield (f"serve_static,{rep.wall_s * 1e6 / len(reqs):.0f},"
+           f"requests_per_sec={static_rps:.3f} "
+           f"tokens_per_sec={rep.tokens_per_s:.1f} "
+           f"decode_steps={rep.decode_steps}")
+
+    # -- continuous batching, same workload and replica count ------------
+    driver = _driver()
+    reqs = _workload(60)
+    rep = driver.serve_continuous(reqs, horizon=600.0)
+    driver.shutdown()
+    yield (f"serve_continuous,{rep.wall_s * 1e6 / len(reqs):.0f},"
+           f"requests_per_sec={rep.requests_per_s:.3f} "
+           f"p50_ms={rep.p50_s * 1e3:.1f} p99_ms={rep.p99_s * 1e3:.1f} "
+           f"speedup_vs_static={rep.requests_per_s / max(static_rps, 1e-9):.2f} "
+           f"decode_steps={rep.decode_steps}")
+
+    # -- chaos: replica killed mid-traffic -------------------------------
+    driver = _driver()
+    reqs = _workload(60)
+    arrivals = [0.01 * i for i in range(len(reqs))]
+    rep = driver.serve_continuous(reqs, arrivals=arrivals,
+                                  faults=[(0.3, "kill", "replica1")],
+                                  horizon=600.0)
+    driver.shutdown()
+    yield (f"serve_chaos,{rep.wall_s * 1e6 / len(reqs):.0f},"
+           f"requests_per_sec={rep.requests_per_s:.3f} "
+           f"p99_ms={rep.p99_s * 1e3:.1f} "
+           f"completed_frac={rep.completed / len(reqs):.3f} "
+           f"recoveries={len(rep.recoveries)}")
+
+    # -- SLO admission under overload ------------------------------------
+    driver = _driver(admission=SLOAdmissionPolicy(default_step_s=STEP_S))
+    reqs = _workload(150, deadline_s=1.0)
+    arrivals = [0.005 * i for i in range(len(reqs))]   # 200 req/s offered
+    rep = driver.serve_continuous(reqs, arrivals=arrivals, horizon=600.0)
+    driver.shutdown()
+    rejected_steps = sum(len(r.generated) for r in reqs
+                         if r.status == "rejected")
+    yield (f"serve_admission,{rep.wall_s * 1e6 / len(reqs):.0f},"
+           f"requests_per_sec={rep.requests_per_s:.3f} "
+           f"shed_rate={rep.shed_rate:.3f} rejected={rep.rejected} "
+           f"rejected_decode_steps={rejected_steps} "
+           f"p99_ms={rep.p99_s * 1e3:.1f}")
+
+    # -- autoscaling through a burst -------------------------------------
+    driver = _driver(
+        n_replicas=1,
+        policy=[ReplicaAutoscaler(min_replicas=1, max_replicas=5,
+                                  patience=2, idle_ticks=3)])
+    reqs = _workload(80)
+    rep = driver.serve_continuous(reqs, arrivals=[0.0] * len(reqs),
+                                  horizon=600.0, tick_period=0.1,
+                                  drain_s=1.0)
+    driver.shutdown()
+    yield (f"serve_autoscale,{rep.wall_s * 1e6 / len(reqs):.0f},"
+           f"requests_per_sec={rep.requests_per_s:.3f} "
+           f"autoscaled_up={rep.autoscaled_up} "
+           f"autoscaled_down={rep.autoscaled_down} "
+           f"replicas_final={rep.replicas_final}")

@@ -1,8 +1,10 @@
-"""Batched serving with WRATH replica failover.
+"""Production serving plane: continuous batching with WRATH failover.
 
-Serves batched requests against a reduced model on three virtual replicas,
-kills a replica mid-decode, and shows WRATH denylisting it and recovering
-the in-flight batch (decode-state snapshot restore) on a healthy replica.
+Drives the full request plane — clock-stamped queue, SLO-aware admission,
+continuous batcher, replica failover — against a reduced model on three
+virtual replicas, killing one mid-traffic and showing every in-flight
+request recovered on the survivors.  A second pass runs the same workload
+through the static batcher to show the continuous plane's throughput win.
 
     PYTHONPATH=src python examples/serving.py --arch olmoe-1b-7b
 """
@@ -11,7 +13,16 @@ import argparse
 import numpy as np
 
 from repro.configs import get_smoke_config
-from repro.serve import Request, WrathServeDriver
+from repro.serve import (Request, SLOAdmissionPolicy, WrathServeDriver)
+
+
+def _requests(cfg, n, new_tokens, deadline_s=None):
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    prompt=rng.integers(0, cfg.vocab_size, size=6).tolist(),
+                    max_new_tokens=new_tokens,
+                    deadline_s=deadline_s)
+            for i in range(n)]
 
 
 def main() -> None:
@@ -23,23 +34,33 @@ def main() -> None:
     args = ap.parse_args()
 
     cfg = get_smoke_config(args.arch)
-    driver = WrathServeDriver(cfg, n_replicas=args.replicas, max_batch=4)
-    rng = np.random.default_rng(0)
-    reqs = [Request(rid=i,
-                    prompt=rng.integers(0, cfg.vocab_size, size=6).tolist(),
-                    max_new_tokens=args.new_tokens)
-            for i in range(args.requests)]
 
-    print(f"serving {len(reqs)} requests on {args.replicas} replicas of "
-          f"{cfg.name} (reduced); killing replica0 mid-decode...")
-    rep = driver.serve(reqs, kill_replica_at=("replica0", 5))
+    # -- static baseline -------------------------------------------------
+    static = WrathServeDriver(cfg, n_replicas=args.replicas, max_batch=4)
+    reqs = _requests(cfg, args.requests, args.new_tokens)
+    base = static.serve(reqs)
+    print(f"static batcher: {base.completed}/{len(reqs)} requests, "
+          f"{base.tokens_generated} tokens ({base.tokens_per_s:.1f} tok/s)")
 
-    print(f"\ncompleted: {rep.completed}/{len(reqs)}  failed: {rep.failed}")
+    # -- continuous plane, replica killed mid-traffic --------------------
+    driver = WrathServeDriver(cfg, n_replicas=args.replicas, max_batch=4,
+                              admission=SLOAdmissionPolicy())
+    reqs = _requests(cfg, args.requests, args.new_tokens, deadline_s=30.0)
+    print(f"\ncontinuous plane: submitting {len(reqs)} requests on "
+          f"{args.replicas} replicas of {cfg.name} (reduced); killing "
+          f"replica0 mid-traffic...")
+    rep = driver.serve_continuous(reqs, faults=[(0.05, "kill", "replica0")],
+                                  horizon=120.0)
+    driver.shutdown()
+
+    print(f"\ncompleted: {rep.completed}/{len(reqs)}  failed: {rep.failed}  "
+          f"rejected: {rep.rejected}  shed: {rep.shed}")
     print(f"tokens generated: {rep.tokens_generated} "
-          f"({rep.tokens_per_s:.1f} tok/s)")
+          f"({rep.requests_per_s:.1f} req/s, p50 {rep.p50_s*1e3:.0f}ms, "
+          f"p99 {rep.p99_s*1e3:.0f}ms)")
     print(f"denylisted replicas: {rep.denylisted}")
     for r in rep.recoveries:
-        print(f"  recovery: {r['replica']} died at decode step {r['step']} "
+        print(f"  recovery: request {r['rid']} lost with {r['replica']} "
               f"-> {r['action']} (rung {r['rung']})")
     sample = reqs[0]
     print(f"\nrequest 0: prompt={sample.prompt} generated={sample.generated}")

@@ -320,6 +320,13 @@ class MonitoringDatabase:
             lambda: defaultdict(PlacementStats))
         self._pool_history: dict[str, dict[str, PlacementStats]] = defaultdict(
             lambda: defaultdict(PlacementStats))
+        # named scalar gauges (serving-plane queue depth, slot occupancy):
+        # streaming stats for the long view + a timestamped ring of recent
+        # samples for trend queries ("has the queue grown for K ticks?")
+        self._gauges: dict[str, StreamingStats] = defaultdict(
+            lambda: StreamingStats(sample_cap=64))
+        self._gauge_rings: dict[str, deque[tuple[float, float]]] = defaultdict(
+            lambda: deque(maxlen=retention))
 
     # -- ingest (radio entry point) ----------------------------------------
     def ingest(self, message: dict[str, Any]) -> None:
@@ -410,6 +417,14 @@ class MonitoringDatabase:
         with self._lock:
             self.failures.append(report)
 
+    def record_gauge(self, name: str, value: float) -> None:
+        """Observe one sample of a named scalar gauge (queue depth, slot
+        occupancy, live replicas).  O(1); ring-bounded like every store."""
+        with self._lock:
+            value = float(value)
+            self._gauges[name].push(value)
+            self._gauge_rings[name].append((self._time(), value))
+
     # -- queries -------------------------------------------------------------
     def last_heartbeats(self) -> dict[str, float]:
         with self._lock:
@@ -492,6 +507,26 @@ class MonitoringDatabase:
         if stats is None or stats.n < min_samples:
             return 0.0
         return stats.p95
+
+    def gauge_stats(self, name: str) -> StreamingStats | None:
+        """Streaming profile of a named gauge (None = never observed)."""
+        with self._lock:
+            stats = self._gauges.get(name)
+            return stats if stats is not None and stats.n else None
+
+    def recent_gauges(self, name: str, k: int = 16) -> list[tuple[float, float]]:
+        """Last ``k`` (timestamp, value) samples of a gauge, oldest first.
+
+        The serving autoscaler's trend query: "has the queue depth stayed
+        above threshold for the last K observations?" reads this instead
+        of keeping private per-policy counters, so any policy (or a test)
+        can audit the same evidence the scaling decision used.
+        """
+        with self._lock:
+            ring = self._gauge_rings.get(name)
+            if not ring:
+                return []
+            return list(ring)[-k:]
 
     def node_health(self, node: str) -> NodeHealth:
         """Heartbeat-trend + memory-trend snapshot for one node."""

@@ -73,6 +73,13 @@ class ResiliencePolicy:
         bad replicas).
     ``on_tick(ctx)``
         Periodic heartbeat on the engine's event loop.
+    ``admit_request(req, ctx) -> str | None``
+        Serving-plane admission check, called by the
+        :class:`~repro.serve.queue.RequestQueue` before a request is
+        enqueued.  A non-``None`` reason string *rejects* the request up
+        front (it never reaches a decode slot) — the request-plane analog
+        of ``on_dispatch``'s predictive fast-fail.  Overridden by
+        :class:`~repro.serve.queue.SLOAdmissionPolicy`.
     ``memo_lookup(rec, ctx) -> (hit, value)``
         Checkpoint hook, called at dispatch once dependencies resolved:
         a ``(True, value)`` return short-circuits execution — the engine
@@ -116,6 +123,9 @@ class ResiliencePolicy:
         return None
 
     def on_tick(self, ctx: SchedulingContext) -> None: ...
+
+    def admit_request(self, req: Any, ctx: SchedulingContext) -> str | None:
+        return None
 
     def memo_lookup(self, rec: Any, ctx: SchedulingContext) -> tuple[bool, Any]:
         return (False, None)
@@ -201,6 +211,9 @@ class PolicyStack(ResiliencePolicy):
             p for p in self.policies if type(p).on_result is not base.on_result)
         self._tickers = tuple(
             p for p in self.policies if type(p).on_tick is not base.on_tick)
+        self._admitters = tuple(
+            p for p in self.policies
+            if type(p).admit_request is not base.admit_request)
         self._checkpointers = tuple(
             p for p in self.policies
             if type(p).memo_lookup is not base.memo_lookup
@@ -307,6 +320,19 @@ class PolicyStack(ResiliencePolicy):
                 p.on_tick(ctx)
             except Exception as err:  # noqa: BLE001
                 self._report(p, "on_tick", err)
+
+    def admit_request(self, req: Any, ctx: SchedulingContext) -> str | None:
+        """First rejection wins; a raising admitter degrades to "admit"
+        (a buggy admission policy must shed resilience, not traffic)."""
+        for p in self._admitters:
+            try:
+                reason = p.admit_request(req, ctx)
+            except Exception as err:  # noqa: BLE001 - admitter bug => admit
+                self._report(p, "admit_request", err)
+                continue
+            if reason is not None:
+                return reason
+        return None
 
     def memo_lookup(self, rec: Any, ctx: SchedulingContext) -> tuple[bool, Any]:
         """First checkpoint hit wins; a raising store degrades to a miss

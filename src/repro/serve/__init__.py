@@ -1,3 +1,16 @@
+"""Production serving plane: queue -> admission -> batcher -> replicas."""
+from repro.serve.autoscaler import QUEUE_DEPTH_GAUGE, ReplicaAutoscaler
+from repro.serve.batcher import (DecodeBackend, JaxDecodeBackend,
+                                 ReplicaSlots, SimDecodeBackend,
+                                 advance_slots)
 from repro.serve.driver import Request, ServeReport, WrathServeDriver
+from repro.serve.queue import (RequestQueue, ServeRequest,
+                               SLOAdmissionPolicy)
 
-__all__ = ["WrathServeDriver", "Request", "ServeReport"]
+__all__ = [
+    "WrathServeDriver", "Request", "ServeReport",
+    "ServeRequest", "RequestQueue", "SLOAdmissionPolicy",
+    "ReplicaAutoscaler", "QUEUE_DEPTH_GAUGE",
+    "DecodeBackend", "JaxDecodeBackend", "SimDecodeBackend",
+    "ReplicaSlots", "advance_slots",
+]

@@ -53,6 +53,15 @@ from repro.sim.scenario import (
     Scenario,
     SimTaskSpec,
 )
+from repro.sim.serve import (
+    SERVE_FAULT_KINDS,
+    ServeFault,
+    ServeRequestSpec,
+    ServeScenario,
+    ServeScenarioResult,
+    run_serve_scenario,
+    serve_campaign,
+)
 
 __all__ = [
     "VirtualClock",
@@ -73,4 +82,11 @@ __all__ = [
     "Fault",
     "FAULT_KINDS",
     "TASK_FAILURE_KINDS",
+    "ServeFault",
+    "ServeRequestSpec",
+    "ServeScenario",
+    "ServeScenarioResult",
+    "run_serve_scenario",
+    "serve_campaign",
+    "SERVE_FAULT_KINDS",
 ]

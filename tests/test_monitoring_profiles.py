@@ -161,3 +161,35 @@ def test_failure_report_tcp_roundtrip_preserves_all_fields():
               "worker", "resource_profile", "requirements", "retry_count",
               "timestamp", "log_tail"):
         assert getattr(got, f) == getattr(want, f), f"field {f} dropped"
+
+
+# --------------------------------------------------------------- gauges --
+def test_gauge_unobserved_returns_empty():
+    mon = MonitoringDatabase()
+    assert mon.gauge_stats("serve.queue_depth") is None
+    assert mon.recent_gauges("serve.queue_depth") == []
+
+
+def test_gauge_streaming_stats_and_recent_window():
+    from repro.sim.clock import VirtualClock
+    clock = VirtualClock()
+    mon = MonitoringDatabase(clock=clock)
+    for depth in (3.0, 1.0, 7.0, 5.0):
+        mon.record_gauge("serve.queue_depth", depth)
+        clock.advance(0.25)
+    stats = mon.gauge_stats("serve.queue_depth")
+    assert stats.n == 4 and stats.min == 1.0 and stats.max == 7.0
+    recent = mon.recent_gauges("serve.queue_depth", k=2)
+    assert [v for _, v in recent] == [7.0, 5.0]     # last k, oldest first
+    t0, t1 = (t for t, _ in recent)
+    assert t1 - t0 == pytest.approx(0.25)           # virtual timestamps
+
+
+def test_gauge_ring_is_retention_bounded():
+    mon = MonitoringDatabase(retention=8)
+    for i in range(50):
+        mon.record_gauge("g", float(i))
+    ring = mon.recent_gauges("g", k=100)
+    assert len(ring) == 8
+    assert [v for _, v in ring] == [float(i) for i in range(42, 50)]
+    assert mon.gauge_stats("g").n == 50             # long view keeps counting

@@ -1,0 +1,205 @@
+"""Continuous serving plane under the deterministic simulation clock:
+slot reuse, SLO admission, autoscaling, chaos-trace determinism."""
+import pytest
+
+from repro.core import MonitoringDatabase
+from repro.engine.policies import replay
+from repro.serve import (ReplicaAutoscaler, RequestQueue, ServeRequest,
+                         SLOAdmissionPolicy, WrathServeDriver)
+from repro.sim import (ServeFault, ServeRequestSpec, ServeScenario,
+                       VirtualClock, run_serve_scenario, serve_campaign)
+
+STEP_S = 0.02
+
+
+def _driver(**kw):
+    clock = kw.pop("clock", None) or VirtualClock()
+    monitor = kw.pop("monitor", None) or MonitoringDatabase(
+        clock=clock, keep_event_log=True)
+    kw.setdefault("decode", "sim")
+    return WrathServeDriver(None, clock=clock, monitor=monitor, **kw)
+
+
+def _req(rid, prompt_len=3, new=6, deadline_s=None):
+    return ServeRequest(rid=rid, prompt=list(range(1, prompt_len + 1)),
+                        max_new_tokens=new, deadline_s=deadline_s)
+
+
+# ---------------------------------------------------- continuous batching --
+def test_slot_vacated_and_reused_before_batch_mates_finish():
+    """A finished request's slot is refilled at the step boundary — the
+    queued request completes while the long slot-mate is still decoding."""
+    driver = _driver(n_replicas=1, max_batch=2)
+    long = _req(0, new=10)
+    short = _req(1, new=2)
+    queued = _req(2, new=2)
+    rep = driver.serve_continuous([long, short, queued], horizon=30.0)
+    driver.shutdown()
+    assert rep.completed == 3 and rep.failed == 0
+    # static batching would hold `queued` until `long` finished
+    assert short.finish_t < long.finish_t
+    assert queued.finish_t < long.finish_t
+    assert len(long.generated) == 10 and len(queued.generated) == 2
+
+
+def test_virtual_clock_timing_is_exact():
+    """Decode wall time is the modeled step cost, nothing else — the
+    driver's clock protocol keeps the whole plane on virtual time."""
+    driver = _driver(n_replicas=1, max_batch=1)
+    req = _req(0, prompt_len=3, new=4)       # steps_total = 6
+    rep = driver.serve_continuous([req], horizon=10.0)
+    driver.shutdown()
+    assert rep.decode_steps == 6
+    assert req.latency_s == pytest.approx(6 * STEP_S)
+
+
+def test_static_serve_runs_on_virtual_clock():
+    driver = _driver(n_replicas=2, max_batch=2)
+    reqs = [_req(i, prompt_len=3, new=4) for i in range(2)]
+    rep = driver.serve(reqs)
+    assert rep.completed == 2
+    # 6 steps at the modeled cost, measured on the virtual clock
+    assert rep.wall_s == pytest.approx(rep.decode_steps * STEP_S)
+
+
+# ------------------------------------------------------------- admission --
+def test_infeasible_deadline_rejected_at_admission_without_decode():
+    driver = _driver(n_replicas=1, max_batch=2,
+                     admission=SLOAdmissionPolicy(default_step_s=STEP_S))
+    doomed = _req(0, prompt_len=5, new=16, deadline_s=0.1)   # needs 0.4s
+    fine = _req(1, prompt_len=3, new=4, deadline_s=5.0)
+    rep = driver.serve_continuous([doomed, fine], horizon=30.0)
+    driver.shutdown()
+    assert doomed.status == "rejected" and "SLO infeasible" in doomed.reason
+    assert doomed.generated == []            # zero decode steps consumed
+    assert fine.status == "done"
+    assert rep.rejected == 1 and rep.completed == 1
+    # only the feasible request's steps ever ran
+    assert rep.decode_steps == fine.steps_total
+    events = [e["event"] for e in driver.monitor.event_log
+              if e.get("rid") == 0]
+    assert events == ["request_rejected"]
+
+
+def test_admission_estimate_tracks_monitored_decode_profile():
+    clock = VirtualClock()
+    monitor = MonitoringDatabase(clock=clock)
+    pol = SLOAdmissionPolicy(default_step_s=0.01, min_samples=3)
+    assert pol.step_estimate_s(monitor) == 0.01      # no samples yet
+    for _ in range(5):
+        monitor.record_task_placement("decode_step", "replica0", "serve",
+                                      ok=True, duration=0.25)
+    assert pol.step_estimate_s(monitor) == pytest.approx(0.25)
+
+
+def test_bounded_queue_sheds_overflow():
+    clock = VirtualClock()
+    q = RequestQueue(clock=clock, capacity=2)
+    assert q.push(_req(0)) and q.push(_req(1))
+    r = _req(2)
+    assert not q.push(r)
+    assert r.status == "rejected" and "queue full" in r.reason
+
+
+def test_queue_sheds_expired_deadline_at_pop():
+    clock = VirtualClock()
+    q = RequestQueue(clock=clock)
+    r = _req(0, deadline_s=0.5)
+    q.push(r)
+    clock.advance(1.0)
+    assert q.pop_ready(4) == []
+    assert r.status == "shed" and "deadline" in r.reason
+
+
+# ------------------------------------------------------------ autoscaler --
+def test_autoscaler_grows_into_backlog_and_shrinks_after_drain():
+    driver = _driver(
+        n_replicas=1, max_batch=2,
+        policy=[ReplicaAutoscaler(min_replicas=1, max_replicas=4,
+                                  patience=2, idle_ticks=3)])
+    reqs = [_req(i, prompt_len=4, new=6) for i in range(30)]
+    rep = driver.serve_continuous(reqs, arrivals=[0.0] * 30, horizon=60.0,
+                                  tick_period=0.1, drain_s=2.0)
+    driver.shutdown()
+    assert rep.completed == 30
+    assert rep.autoscaled_up > 0
+    assert rep.autoscaled_down > 0
+    assert rep.replicas_final == 1           # back to the floor
+    events = [e["event"] for e in driver.monitor.event_log]
+    assert "autoscale_grow" in events and "autoscale_shrink" in events
+
+
+def test_autoscaler_replaces_lost_replica_below_floor():
+    driver = _driver(
+        n_replicas=2, max_batch=2,
+        policy=[ReplicaAutoscaler(min_replicas=2, max_replicas=4,
+                                  patience=2, idle_ticks=100)])
+    reqs = [_req(i, new=8) for i in range(8)]
+    rep = driver.serve_continuous(
+        reqs, arrivals=[0.02 * i for i in range(8)],
+        faults=[(0.1, "kill", "replica1")], horizon=60.0, tick_period=0.1)
+    driver.shutdown()
+    assert rep.completed == 8
+    assert rep.autoscaled_up >= 1            # capacity repair
+    assert len(driver.live_replicas()) >= 2
+
+
+# ---------------------------------------------------------------- chaos --
+def test_failover_requeues_in_flight_without_token_loss():
+    driver = _driver(n_replicas=3, max_batch=2)
+    reqs = [_req(i, new=6) for i in range(6)]
+    rep = driver.serve_continuous(
+        reqs, arrivals=[0.01 * i for i in range(6)],
+        faults=[(0.05, "kill", "replica0")], horizon=60.0)
+    driver.shutdown()
+    assert rep.completed == 6 and rep.failed == 0
+    assert rep.recoveries and "replica0" in rep.denylisted
+    assert all(len(r.generated) == r.max_new_tokens for r in reqs)
+    assert any(r.recoveries > 0 for r in reqs)
+
+
+def test_denylist_updates_with_custom_policy_stack_continuous():
+    """Regression: with a non-WRATH stack nothing used to maintain the
+    driver denylist — retries could be routed back at the dead replica."""
+    driver = _driver(n_replicas=3, max_batch=2, policy=[replay(3)])
+    reqs = [_req(i, new=6) for i in range(6)]
+    rep = driver.serve_continuous(
+        reqs, arrivals=[0.01 * i for i in range(6)],
+        faults=[(0.05, "kill", "replica0")], horizon=60.0)
+    driver.shutdown()
+    assert rep.completed == 6
+    assert "replica0" in rep.denylisted
+    adds = [e for e in driver.monitor.event_log
+            if e["event"] == "denylist_add"]
+    assert adds and adds[0]["source"] == "serve_driver"
+
+
+def test_denylist_updates_with_custom_policy_stack_static():
+    driver = _driver(n_replicas=3, max_batch=2, policy=[replay(3)])
+    reqs = [_req(i, new=6) for i in range(4)]
+    rep = driver.serve(reqs, kill_replica_at=("replica0", 2))
+    assert rep.completed == 4
+    assert "replica0" in rep.denylisted
+
+
+def test_chaos_scenario_trace_byte_identical():
+    scenario = ServeScenario(
+        seed=0, n_replicas=3, max_batch=2, step_s=STEP_S,
+        requests=[ServeRequestSpec(at=0.01 * i, prompt=(1, 2, 3),
+                                   max_new_tokens=5,
+                                   deadline_s=2.0 if i % 2 else None)
+                  for i in range(12)],
+        faults=[ServeFault(at=0.08, kind="kill", replica="replica1"),
+                ServeFault(at=0.5, kind="restore", replica="replica1")],
+        admission=True, autoscale=True)
+    a = run_serve_scenario(scenario)
+    b = run_serve_scenario(scenario)
+    assert a.ok, a.violations
+    assert a.trace == b.trace
+    assert "replica_lost" in a.trace and "fault_injected" in a.trace
+
+
+def test_seeded_serve_campaign_invariants_hold():
+    results = serve_campaign(8, base_seed=1234, check_determinism=True)
+    bad = [(r.seed, r.violations) for r in results if not r.ok]
+    assert not bad, bad

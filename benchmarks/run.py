@@ -18,6 +18,7 @@ import time
 from pathlib import Path
 
 from benchmarks import (
+    chaos_search,
     engine_throughput,
     fig4_time_to_failure,
     fig5_overhead,
@@ -33,6 +34,7 @@ from benchmarks import (
 
 SUITES = {
     "engine_throughput": engine_throughput.run,
+    "chaos_search": chaos_search.run,
     "kernels": kernels.run,
     "fig4": fig4_time_to_failure.run,
     "fig4_proactive": fig4_time_to_failure.run_proactive,

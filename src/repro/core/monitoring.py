@@ -383,6 +383,21 @@ class MonitoringDatabase:
             if self.event_log is not None:
                 self.event_log.append({"scope": "system", **entry})
 
+    def event_sequence(self) -> list[tuple[str, str]]:
+        """Ordered ``(scope_class, event)`` pairs from the event log.
+
+        The raw material of trace n-gram coverage
+        (:mod:`repro.sim.coverage`): task scopes collapse to the literal
+        ``"task"`` — event *kinds* and their order define an engine
+        state, task identities are just scenario size.  Requires
+        ``keep_event_log=True``.
+        """
+        if self.event_log is None:
+            raise ValueError("monitor was not built with keep_event_log=True")
+        with self._lock:
+            return [("system" if e["scope"] == "system" else "task",
+                     e["event"]) for e in self.event_log]
+
     def record_resource_profile(self, node: str, profile: dict[str, float]) -> None:
         with self._lock:
             self.resource_profiles[node].append({"time": self._time(), **profile})

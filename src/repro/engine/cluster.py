@@ -288,6 +288,18 @@ class ResourcePool:
         node.pool = self
         self.nodes.append(node)
 
+    def remove_node(self, name: str) -> Node | None:
+        """Elastic membership: detach a node from the pool (scheduling
+        stops seeing it immediately).  Queued/running work on the node is
+        the caller's problem — the DFK's leave path sweeps it through the
+        normal failure routing before calling this."""
+        for i, n in enumerate(self.nodes):
+            if n.name == name:
+                del self.nodes[i]
+                n.pool = None
+                return n
+        return None
+
 
 class Worker:
     """A worker process analog: one thread pulling tasks off the node queue."""

@@ -269,6 +269,8 @@ class DataFlowKernel:
             # decentralized work stealing: queued records migrated to an
             # idle node (one count per hop)
             "steals": 0,
+            # elastic cluster membership
+            "joins": 0, "leaves": 0,
         }
 
     # ------------------------------------------------------------------ #
@@ -1017,6 +1019,68 @@ class DataFlowKernel:
         self.denylist.discard(node_name)
         if self.monitor is not None:
             self.monitor.record_system_event("node_undrain", node=node_name)
+
+    # ------------------------------------------------------------------ #
+    # elastic cluster membership
+    # ------------------------------------------------------------------ #
+    def join_node(self, node: Any, *, pool: str | None = None) -> bool:
+        """A new node joins a *running* pool: its pilot job starts, it
+        heartbeats immediately, and the scheduler sees it on the next
+        placement — no engine restart.  Returns False if the pool is
+        unknown or a node by that name already exists."""
+        pool_name = pool or self.default_pool
+        ex = self.executors.get(pool_name)
+        if ex is None or self.cluster.find_node(node.name) is not None:
+            return False
+        ex.add_node(node)
+        with self._lock:
+            self.stats["joins"] += 1
+        if self.monitor is not None:
+            self.monitor.record_system_event("node_join", node=node.name,
+                                             pool=pool_name)
+        return True
+
+    def leave_node(self, node_name: str, *,
+                   reason: str = "decommissioned") -> bool:
+        """A node leaves the running cluster (scale-in, spot reclaim with
+        notice, maintenance).  Placement stops immediately; everything
+        queued or running there is swept through the normal failure
+        routing so the retry hierarchy re-places it elsewhere.  Unlike
+        :meth:`drain_node` the node is *gone* afterwards — the heartbeat
+        watcher stops tracking it and a later join under the same name is
+        a brand-new member."""
+        ex = None
+        for pool_name, cand in self.executors.items():
+            if any(n.name == node_name for n in cand.pool.nodes):
+                ex = cand
+                break
+        if ex is None:
+            return False
+        if self.monitor is not None:
+            self.monitor.record_system_event("node_leave", node=node_name,
+                                             reason=reason)
+        # detach first: the failure sweep below re-places victims, and the
+        # scheduler must already be blind to the leaving node
+        ex.remove_node(node_name)
+        with self._lock:
+            self.stats["leaves"] += 1
+            victims = [rec for tid, rec in self.tasks.items()
+                       if self._assignment.get(tid, (None, None))[1] == node_name
+                       and rec.state in (TaskState.SCHEDULED, TaskState.RUNNING)
+                       and not self._done_first.get(tid)]
+        for rec in victims:
+            err = HardwareShutdownError(
+                f"node {node_name} left the cluster ({reason})",
+                node=node_name)
+            report = self._make_report(rec, err, node=node_name,
+                                       pool=self._assignment[rec.task_id][0])
+            self._route_failure(rec, report, err)
+        # departed nodes carry no denylist/drain baggage into a future
+        # join under the same name
+        self.denylist.discard(node_name)
+        self.drained.discard(node_name)
+        self._resume_logged.discard(node_name)
+        return True
 
     def _launch_copy(self, rec: TaskRecord, *,
                      avoid_node: str | set[str] | None) -> TaskRecord | None:

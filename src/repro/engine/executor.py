@@ -52,14 +52,17 @@ class Executor:
         self._started = False
 
     # -- pilot-job lifecycle ---------------------------------------------
+    def _make_manager(self, node: Node) -> NodeManager:
+        return NodeManager(node, self.on_result, self._heartbeat,
+                           heartbeat_period=self._heartbeat_period,
+                           clock=self.clock,
+                           steal_source=self.steal_task if self.steal
+                           else None)
+
     def start(self) -> None:
         failures = []
         for node in self.pool.nodes:
-            mgr = NodeManager(node, self.on_result, self._heartbeat,
-                              heartbeat_period=self._heartbeat_period,
-                              clock=self.clock,
-                              steal_source=self.steal_task if self.steal
-                              else None)
+            mgr = self._make_manager(node)
             node.manager = mgr
             try:
                 mgr.start()
@@ -75,6 +78,25 @@ class Executor:
         for mgr in self.managers.values():
             mgr.stop()
         self._started = False
+
+    # -- elastic membership ------------------------------------------------
+    def add_node(self, node: Node) -> None:
+        """A node joins the running pool: pilot job starts immediately and
+        the scheduler sees it on the next placement."""
+        self.pool.add_node(node)
+        mgr = self._make_manager(node)
+        node.manager = mgr
+        if self._started:
+            mgr.start()
+            self.managers[node.name] = mgr
+
+    def remove_node(self, node_name: str) -> Node | None:
+        """A node leaves the running pool: pilot job stops, placement
+        stops immediately.  The caller sweeps any assigned work first."""
+        mgr = self.managers.pop(node_name, None)
+        if mgr is not None:
+            mgr.stop()
+        return self.pool.remove_node(node_name)
 
     # -- scheduling --------------------------------------------------------
     def eligible_nodes(self, record: TaskRecord) -> list[Node]:

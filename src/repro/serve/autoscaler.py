@@ -12,8 +12,10 @@ Signals, deliberately simple and observable:
 * **grow** — the queue has held above ``grow_queue_per_slot`` requests
   per live decode slot for ``patience`` consecutive gauge samples
   (sustained backlog, not a blip), and the pool is below
-  ``max_replicas``.  One replica per decision: scaling reacts at tick
-  cadence, fast enough for the sim but never oscillating step-to-step.
+  ``max_replicas``.  One replica per decision, followed by a
+  ``cooldown_ticks`` quiet period (default = ``patience``) so the next
+  decision only ever reads gauge samples taken *after* the last one —
+  scaling reacts at tick cadence but never oscillates step-to-step.
 * **shrink** — the queue has been empty and at least one replica fully
   idle for ``idle_ticks`` consecutive ticks, and the pool is above
   ``min_replicas``.  Only an idle replica is retired (no in-flight
@@ -44,7 +46,7 @@ class ReplicaAutoscaler(ResiliencePolicy):
 
     def __init__(self, *, min_replicas: int = 1, max_replicas: int = 8,
                  grow_queue_per_slot: float = 1.0, patience: int = 3,
-                 idle_ticks: int = 5):
+                 idle_ticks: int = 5, cooldown_ticks: int | None = None):
         if min_replicas < 1:
             raise ValueError("min_replicas must be >= 1")
         if max_replicas < min_replicas:
@@ -54,8 +56,17 @@ class ReplicaAutoscaler(ResiliencePolicy):
         self.grow_queue_per_slot = grow_queue_per_slot
         self.patience = patience
         self.idle_ticks = idle_ticks
+        # post-decision cooldown: the queue-depth gauge window still holds
+        # pre-decision samples on the tick after a scale action, so acting
+        # again immediately would react to a world that no longer exists
+        # (the documented "never oscillating step-to-step" contract).
+        # Defaults to `patience` — exactly long enough for the window to
+        # refill with post-decision samples.
+        self.cooldown_ticks = patience if cooldown_ticks is None \
+            else cooldown_ticks
         self.plane: Any = None
         self._idle_streak = 0
+        self._cooldown = 0
         self.grown = 0
         self.shrunk = 0
 
@@ -74,9 +85,20 @@ class ReplicaAutoscaler(ResiliencePolicy):
         n_live = len(live)
 
         # capacity repair: below the floor (replica loss) -> grow now
+        # (repair ignores cooldown — availability beats smoothing — but
+        # arms it, so the next *load-following* decision waits out the
+        # stale gauge window)
         if n_live < self.min_replicas:
             if plane.add_replica(reason="below min_replicas") is not None:
                 self.grown += 1
+            self._idle_streak = 0
+            self._cooldown = self.cooldown_ticks
+            return
+
+        # cooling down after a scale action: the gauge window still shows
+        # the pre-decision world; skip load-following until it refills
+        if self._cooldown > 0:
+            self._cooldown -= 1
             self._idle_streak = 0
             return
 
@@ -91,6 +113,7 @@ class ReplicaAutoscaler(ResiliencePolicy):
                 if plane.add_replica(reason="sustained backlog") is not None:
                     self.grown += 1
                 self._idle_streak = 0
+                self._cooldown = self.cooldown_ticks
                 return
 
         # sustained idleness -> shrink one idle replica
@@ -102,6 +125,7 @@ class ReplicaAutoscaler(ResiliencePolicy):
                                         reason="sustained idle"):
                     self.shrunk += 1
                 self._idle_streak = 0
+                self._cooldown = self.cooldown_ticks
         else:
             self._idle_streak = 0
 

@@ -239,12 +239,16 @@ class WrathServeDriver:
 
     def backlog_steps(self) -> int:
         """Decode steps owed to queued + in-flight requests (admission's
-        queue-delay estimator)."""
+        queue-delay estimator).  Queued requests are counted from their
+        replay state (failover requeues owe prompt + recovered tokens),
+        in-flight occupants from their live slot state — both via the
+        request's own step accounting, which ends on the step that emits
+        the final token (the old inline formula double-counted that
+        boundary step for every occupant)."""
         steps = sum(r.steps_total for r in self.queue.queued())
         for n in self.live_replicas():
-            for r in self._slots[n.name].occupants():
-                steps += max(len(r.feed) - r.pos, 0) + \
-                    (r.max_new_tokens - len(r.generated))
+            steps += sum(r.steps_remaining
+                         for r in self._slots[n.name].occupants())
         return steps
 
     def replica_idle(self, node: Node) -> bool:

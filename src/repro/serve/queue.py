@@ -62,9 +62,26 @@ class ServeRequest:
 
     @property
     def steps_total(self) -> int:
-        """Decode steps a fresh admission needs: teacher-forced prompt
-        (and any tokens recovered from a lost replica) + new tokens."""
-        return len(self.prompt) + self.max_new_tokens - 1
+        """Decode steps this request needs from (re)admission, derived
+        from its replay state: the batcher teacher-forces the prompt plus
+        every token recovered from a lost replica (``generated``), then
+        decodes the remaining new tokens — the final step both consumes
+        the last feed position and emits the last token, hence the -1."""
+        remaining_new = self.max_new_tokens - len(self.generated)
+        if remaining_new <= 0:
+            return 0
+        feed_len = len(self.prompt) + len(self.generated)
+        return feed_len + remaining_new - 1
+
+    @property
+    def steps_remaining(self) -> int:
+        """Steps still owed by an *in-flight* slot occupant, from its
+        live batcher state (feed position + tokens still to generate).
+        Queued requests have no slot state — use :attr:`steps_total`."""
+        remaining_new = self.max_new_tokens - len(self.generated)
+        if remaining_new <= 0:
+            return 0
+        return max(len(self.feed) - self.pos, 0) + remaining_new - 1
 
     @property
     def done(self) -> bool:
@@ -242,12 +259,21 @@ class SLOAdmissionPolicy(ResiliencePolicy):
             return None
         step_s = self.step_estimate_s(ctx.monitor)
         service_s = req.steps_total * step_s
-        queued = backlog_steps = slots = 0
+        queued = backlog_steps = 0
+        slots: int | None = None
         if self.plane is not None:
             queued = self.plane.queue.depth()
             slots = self.plane.total_slots()
             backlog_steps = self.plane.backlog_steps()
-        queue_delay_s = (backlog_steps * step_s / max(slots, 1)
+        if slots == 0:
+            # total replica outage: zero live decode slots means nothing
+            # drains and no completion time can be projected — any
+            # deadline is infeasible until capacity returns (the old
+            # max(slots, 1) floor projected one phantom slot and admitted
+            # everything mid-outage)
+            return ("SLO infeasible: no live decode slots (replica "
+                    f"outage); deadline {deadline:.3f}s cannot be met")
+        queue_delay_s = (backlog_steps * step_s / (slots or 1)
                          if queued or backlog_steps else 0.0)
         projected = self.safety * (queue_delay_s + service_s)
         if projected > deadline:

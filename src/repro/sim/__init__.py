@@ -30,6 +30,18 @@ Chaos campaign (also ``python -m repro.sim --scenarios 500``)::
     assert report.ok, report.summary()
 """
 from repro.sim.clock import VirtualClock
+from repro.sim.coverage import CoverageMap, trace_ngrams, trace_tokens
+from repro.sim.search import (
+    GuidedCampaignResult,
+    guided_campaign,
+    load_corpus,
+    mutate_scenario,
+    promote_repro,
+    scenario_id,
+    shrink_scenario,
+    uniform_campaign_coverage,
+    violation_signature,
+)
 from repro.sim.cluster import (
     SimCluster,
     SimExecutor,
@@ -46,6 +58,7 @@ from repro.sim.harness import (
     run_scenario,
 )
 from repro.sim.scenario import (
+    CORRELATED_FAULT_KINDS,
     FAULT_KINDS,
     TASK_FAILURE_KINDS,
     Fault,
@@ -81,7 +94,20 @@ __all__ = [
     "NodeSpec",
     "Fault",
     "FAULT_KINDS",
+    "CORRELATED_FAULT_KINDS",
     "TASK_FAILURE_KINDS",
+    "CoverageMap",
+    "trace_tokens",
+    "trace_ngrams",
+    "GuidedCampaignResult",
+    "guided_campaign",
+    "uniform_campaign_coverage",
+    "mutate_scenario",
+    "shrink_scenario",
+    "scenario_id",
+    "violation_signature",
+    "promote_repro",
+    "load_corpus",
     "ServeFault",
     "ServeRequestSpec",
     "ServeScenario",

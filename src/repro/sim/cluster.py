@@ -120,6 +120,11 @@ class SimNodeManager:
         # sim-pump event, not one per record (the flag is cleared when the
         # event fires, single-threaded and therefore deterministic)
         self._pump_scheduled = False
+        # network partition: the *data* path is cut while heartbeats keep
+        # flowing — no pickups, and in-flight completions are buffered
+        # here until the partition heals (or dropped if the node dies)
+        self._partitioned = False
+        self._held_deliveries: list[tuple[Any, Any, Any, BaseException | None]] = []
 
     # -- lifecycle --------------------------------------------------------
     def start(self) -> None:
@@ -198,6 +203,10 @@ class SimNodeManager:
         self.node.healthy = False
         for w in self.node.workers:
             w.alive = False
+        # completions trapped behind a partition die with the node
+        for held_worker, _rec, _res, _err in self._held_deliveries:
+            self._release(held_worker)
+        self._held_deliveries.clear()
 
     def kill_worker(self, worker: SimWorker | None = None) -> bool:
         """Externally SIGKILL one (busy, else any alive) worker."""
@@ -209,6 +218,10 @@ class SimNodeManager:
             return False
         worker.alive = False
         rec = worker.current
+        # a completion already buffered behind a partition dies with its
+        # worker — the loss error below supersedes it
+        self._held_deliveries = [h for h in self._held_deliveries
+                                 if h[0] is not worker]
         if rec is not None:
             if worker.completion is not None:
                 worker.completion.cancel()
@@ -219,6 +232,21 @@ class SimNodeManager:
                 self.executor._deliver, worker, rec, None, err,
                 name="sim-complete")
         return True
+
+    # -- network partition (data path cut, heartbeats flowing) ------------
+    def partition(self) -> None:
+        self._partitioned = True
+
+    def heal_partition(self) -> None:
+        """Reconnect the data path: flush completions that finished behind
+        the partition (in completion order), then resume pickups."""
+        if not self._partitioned:
+            return
+        self._partitioned = False
+        held, self._held_deliveries = self._held_deliveries, []
+        for worker, rec, result, err in held:
+            self.executor._deliver(worker, rec, result, err)
+        self.schedule_pump()
 
     # -- execution ---------------------------------------------------------
     def schedule_pump(self) -> None:
@@ -241,7 +269,7 @@ class SimNodeManager:
         event-loop analog of the real worker's steal-on-idle, running
         deterministically in (timestamp, FIFO) event order.
         """
-        if not self.node.healthy:
+        if not self.node.healthy or self._partitioned:
             return
         while True:
             # plain loop, not next(genexp): restart_dead_workers() may
@@ -329,20 +357,10 @@ class SimExecutor(Executor):
         return make
 
     # -- pilot-job lifecycle ----------------------------------------------
-    def start(self) -> None:
-        failures = []
-        for node in self.pool.nodes:
-            mgr = SimNodeManager(node, self)
-            node.manager = mgr  # type: ignore[assignment]
-            try:
-                mgr.start()
-                self.managers[node.name] = mgr
-            except PilotJobInitError as e:
-                failures.append(e)
-        self._started = True
-        if failures and not self.managers:
-            raise PilotJobInitError(
-                f"all pilot jobs failed in pool {self.pool.name}: {failures[0]}")
+    def _make_manager(self, node: Node) -> SimNodeManager:  # type: ignore[override]
+        # the base Executor's start()/add_node() call this, so elastic
+        # join reuses the real executor's membership path verbatim
+        return SimNodeManager(node, self)
 
     def stop(self) -> None:
         for mgr in self.managers.values():
@@ -463,6 +481,13 @@ class SimExecutor(Executor):
                  err: BaseException | None) -> None:
         """The completion event: release resources, hand the DFK the result."""
         mgr = self.managers.get(worker.node.name)
+        if mgr is not None and mgr._partitioned:
+            # data path cut: the task finished on the far side but the
+            # result can't cross; buffer until partition_heal (or drop on
+            # node death).  Heartbeats keep flowing elsewhere, so the
+            # engine sees a healthy node that delivers nothing.
+            mgr._held_deliveries.append((worker, rec, result, err))
+            return
         if mgr is not None:
             mgr._release(worker)
         rec.end_time = self.clock.time()

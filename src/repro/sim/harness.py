@@ -22,6 +22,7 @@ byte for byte.
 from __future__ import annotations
 
 import json
+import math
 import re
 import time as _wall
 from dataclasses import dataclass, field
@@ -323,8 +324,15 @@ def run_scenario(scenario: Scenario, *,
 
     def apply_fault(idx: int, fault: Any) -> None:
         fired.add(idx)
-        monitor.record_system_event(
-            f"fault_{fault.kind}", node=fault.node, workflow=fault.workflow)
+        payload: dict[str, Any] = {"node": fault.node,
+                                   "workflow": fault.workflow}
+        if fault.nodes:
+            payload["nodes"] = list(fault.nodes)
+        if fault.kind == "mass_preempt":
+            payload["fraction"] = fault.fraction
+        if fault.spec is not None:
+            payload["node"] = fault.spec.name
+        monitor.record_system_event(f"fault_{fault.kind}", **payload)
         if fault.kind == "engine_crash":
             # flagged only: the teardown/rebuild happens *outside* the
             # event loop (run_until checks the predicate between events)
@@ -360,6 +368,44 @@ def run_scenario(scenario: Scenario, *,
             if wf is not None:
                 cancel_times[fault.workflow] = clock.time()
                 wf.cancel("scripted cancellation")
+        elif fault.kind == "zone_down":
+            # the whole group at once — one fault event, many nodes
+            for name in fault.nodes:
+                node = cluster.find_node(name)
+                if node is not None:
+                    node.healthy = False
+                ex.fail_node(name)
+        elif fault.kind == "zone_up":
+            for name in fault.nodes:
+                ex.restore_node(name)
+        elif fault.kind == "partition":
+            mgr = ex.managers.get(fault.node)
+            if mgr is not None:
+                mgr.partition()
+        elif fault.kind == "partition_heal":
+            mgr = ex.managers.get(fault.node)
+            if mgr is not None:
+                mgr.heal_partition()
+        elif fault.kind == "mass_preempt":
+            # spot reclaim: kill fraction of alive workers in one tick.
+            # Victim order is deterministic — busy workers first (maximum
+            # disruption), then (node, worker id) lexicographic
+            alive = [(mgr, w) for _, mgr in sorted(ex.managers.items())
+                     for w in mgr.node.workers if w.alive]
+            alive.sort(key=lambda mw: (not mw[1].busy,
+                                       mw[1].node.name, mw[1].worker_id))
+            n_kill = math.ceil(fault.fraction * len(alive))
+            for mgr, w in alive[:n_kill]:
+                mgr.kill_worker(w)
+        elif fault.kind == "node_join":
+            s = fault.spec
+            dfk.join_node(Node(name=s.name, memory_gb=s.memory_gb,
+                               speed=s.speed, workers_per_node=s.workers,
+                               packages=frozenset(s.packages),
+                               ulimit_files=s.ulimit_files),
+                          pool="sim")
+        elif fault.kind == "node_leave":
+            dfk.leave_node(fault.node, reason="scripted node_leave")
 
     build_engine()
     t0 = clock.now()
@@ -383,6 +429,16 @@ def run_scenario(scenario: Scenario, *,
         hb_paused = [name for name, mgr
                      in old_dfk.executors["sim"].managers.items()
                      if mgr._hb_paused]
+        partitioned = [name for name, mgr
+                       in old_dfk.executors["sim"].managers.items()
+                       if mgr._partitioned]
+        # elastic membership survives the crash too: nodes that joined are
+        # still physically there, departed nodes are still gone
+        base_names = {s.name for s in scenario.nodes}
+        old_nodes = [n for pool in old_cluster.pools.values()
+                     for n in pool.nodes]
+        joined = [n for n in old_nodes if n.name not in base_names]
+        departed = base_names - {n.name for n in old_nodes}
         cancelled = {name: wf.cancel_reason
                      for name, wf in state["wfs"].items() if wf.cancelled}
         already_submitted = sorted(futures)
@@ -391,9 +447,20 @@ def run_scenario(scenario: Scenario, *,
         build_engine()
         dfk, cluster = state["dfk"], state["cluster"]
         ex = dfk.executors["sim"]
+        for n in joined:
+            dfk.join_node(Node(name=n.name, memory_gb=n.memory_gb,
+                               speed=n.speed,
+                               workers_per_node=n.workers_per_node,
+                               packages=n.packages,
+                               ulimit_files=n.ulimit_files),
+                          pool="sim")
+        for name in sorted(departed):
+            dfk.leave_node(name, reason="departed before restart")
         # environment state survives an engine restart: dead hardware
-        # stays dead until a scripted node_up revives it, and a silent
-        # monitoring agent stays silent until a scripted hb_resume
+        # stays dead until a scripted node_up revives it, a silent
+        # monitoring agent stays silent until a scripted hb_resume, and a
+        # partition stays cut until a scripted partition_heal (anything
+        # that finished behind it was lost with the old engine)
         for name in dead:
             node = cluster.find_node(name)
             if node is not None:
@@ -403,6 +470,10 @@ def run_scenario(scenario: Scenario, *,
             mgr = ex.managers.get(name)
             if mgr is not None:
                 mgr.pause_heartbeats()
+        for name in partitioned:
+            mgr = ex.managers.get(name)
+            if mgr is not None:
+                mgr.partition()
         # scope cancellation is coordinator state the replayed script
         # re-issues; members resubmitted below auto-cancel at submit
         for name, reason in cancelled.items():

@@ -88,12 +88,19 @@ class ServeScenario:
     @staticmethod
     def random(seed: int, *, max_requests: int = 32,
                fault_rate: float = 0.6, horizon: float = 60.0,
-               vocab_size: int = 256) -> "ServeScenario":
+               vocab_size: int = 256,
+               outage_rate: float = 0.0) -> "ServeScenario":
         """Sample a serving chaos scenario; every choice flows from the seed.
 
-        At least one replica is never targeted by a fault, so a healthy
-        floor always exists and "every admitted request reaches a
-        terminal state" stays assertable.
+        At least one replica is never targeted by a *partial* fault, so a
+        healthy floor always exists and "every admitted request reaches a
+        terminal state" stays assertable.  With ``outage_rate`` > 0 a
+        scenario may additionally script a **total replica outage**: every
+        replica (floor included) killed in one window, then every one
+        restored — the zero-live-slot regime the SLO admission policy must
+        reject into rather than divide through.  The block draws nothing
+        from the RNG at rate 0.0, so pre-existing seeds keep their traces
+        byte for byte.
         """
         rng = random.Random(seed)
         n_replicas = rng.randint(2, 4)
@@ -125,6 +132,16 @@ class ServeScenario:
                 faults.append(ServeFault(
                     at=round(at + rng.uniform(0.2, 2.0), 6),
                     kind="restore", replica=name))
+        if outage_rate > 0.0 and rng.random() < outage_rate:
+            # total outage window: correlated kill of the whole pool,
+            # correlated restore — always healed so terminality holds
+            ot = round(rng.uniform(0.05, max(t, 0.1)), 6)
+            heal = round(ot + rng.uniform(0.3, 1.5), 6)
+            for i in range(n_replicas):
+                name = f"replica{i}"
+                faults.append(ServeFault(at=ot, kind="kill", replica=name))
+                faults.append(ServeFault(at=heal, kind="restore",
+                                         replica=name))
         faults.sort(key=lambda f: (f.at, f.kind, f.replica))
         return ServeScenario(
             seed=seed, n_replicas=n_replicas, max_batch=max_batch,
@@ -151,9 +168,21 @@ class ServeScenarioResult:
 
 
 def _check_invariants(scenario: ServeScenario, requests: list[ServeRequest],
-                      report) -> list[str]:
+                      report, monitor: MonitoringDatabase) -> list[str]:
     """Serving-plane invariants every scenario must satisfy."""
     v: list[str] = []
+    # autoscaler cooldown contract: two *load-following* grows can never
+    # land within the patience window (capacity repair is exempt — it
+    # answers replica loss, not the gauge trend)
+    grows = [e for e in monitor.system_events
+             if e["event"] == "autoscale_grow"
+             and e.get("reason") == "sustained backlog"]
+    min_gap = 2 * scenario.tick_period        # autoscaler runs patience=2
+    for a, b in zip(grows, grows[1:]):
+        if b["time"] - a["time"] < min_gap - 1e-9:
+            v.append(f"back-to-back autoscale grows at {a['time']:.3f}s "
+                     f"and {b['time']:.3f}s (inside the "
+                     f"{min_gap:.3f}s cooldown window)")
     total = (report.completed + report.failed + report.rejected
              + report.shed)
     if total != len(requests):
@@ -210,20 +239,26 @@ def run_serve_scenario(scenario: ServeScenario) -> ServeScenarioResult:
     return ServeScenarioResult(
         seed=scenario.seed, scenario=scenario, report=report,
         trace=build_trace(monitor),
-        violations=_check_invariants(scenario, requests, report))
+        violations=_check_invariants(scenario, requests, report, monitor))
 
 
 def serve_campaign(n_scenarios: int, *, base_seed: int = 0,
-                   check_determinism: bool = False) -> list[ServeScenarioResult]:
+                   check_determinism: bool = False,
+                   scenario_kwargs: dict | None = None,
+                   ) -> list[ServeScenarioResult]:
     """Run ``n_scenarios`` seeded serving scenarios; with
     ``check_determinism`` each scenario runs twice and a trace mismatch is
-    recorded as a violation."""
+    recorded as a violation.  ``scenario_kwargs`` forwards to
+    :meth:`ServeScenario.random` (e.g. ``outage_rate=0.3`` to mix in
+    total-outage windows)."""
     results = []
+    kw = scenario_kwargs or {}
     for i in range(n_scenarios):
-        scenario = ServeScenario.random(base_seed + i)
+        scenario = ServeScenario.random(base_seed + i, **kw)
         res = run_serve_scenario(scenario)
         if check_determinism:
-            again = run_serve_scenario(ServeScenario.random(base_seed + i))
+            again = run_serve_scenario(
+                ServeScenario.random(base_seed + i, **kw))
             if again.trace != res.trace:
                 res.violations.append("trace not deterministic across runs")
         results.append(res)

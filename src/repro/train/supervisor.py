@@ -57,9 +57,10 @@ class TrainEvent:
     """Injected failure for a given step (training-plane fail engine)."""
 
     step: int
-    kind: str                  # host_down | host_up | nan | straggler
+    kind: str    # host_down | host_up | nan | straggler | host_join | host_leave
     host: str | None = None
     factor: float = 5.0        # straggler slowdown
+    memory_gb: float = 192.0   # joining host's capacity (host_join)
 
 
 @dataclasses.dataclass
@@ -284,6 +285,22 @@ class WrathTrainSupervisor:
                     self.denylist.discard(node.name)
                 elif ev.kind == "straggler" and node:
                     node.speed = 1.0 / ev.factor
+                elif ev.kind == "host_join" and ev.host and node is None:
+                    # elastic scale-out: the next step's shard plan is
+                    # recomputed from the live host list, so the joiner
+                    # picks up a sub-batch immediately — no restart
+                    self.cluster.pools["pod0"].add_node(
+                        Node(name=ev.host, memory_gb=ev.memory_gb))
+                    self.monitor.record_system_event("host_join",
+                                                     node=ev.host)
+                elif ev.kind == "host_leave" and node:
+                    # elastic scale-in: remove from membership entirely
+                    # (unlike host_down the host is *gone*, not unhealthy)
+                    # and reshard the remaining global batch live
+                    self.cluster.pools["pod0"].remove_node(ev.host)
+                    self.denylist.discard(ev.host)
+                    self.monitor.record_system_event("host_leave",
+                                                     node=ev.host)
 
             inject_nan = any(e.kind == "nan" for e in step_events)
 

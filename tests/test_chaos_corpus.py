@@ -1,0 +1,41 @@
+"""Regression corpus: shrunk chaos repros replayed forever.
+
+Every ``tests/chaos_corpus/*.json`` entry is a scenario the guided chaos
+search (or a hand shrink) once minimized, promoted with the exact set of
+invariant-violation *signatures* it must reproduce (``expect: []`` pins
+a scenario that must stay clean).  Each entry runs twice — the traces
+must match byte for byte — and its violation signatures must equal the
+promoted expectation exactly: a fixed bug stays fixed, a pinned repro
+stays reproducing, and any drift in either direction fails loudly.
+"""
+from pathlib import Path
+
+import pytest
+
+from repro.sim import load_corpus, run_scenario, violation_signature
+
+CORPUS_DIR = Path(__file__).parent / "chaos_corpus"
+
+ENTRIES = load_corpus(CORPUS_DIR)
+
+
+def test_corpus_is_not_empty():
+    assert ENTRIES, f"no corpus entries under {CORPUS_DIR}"
+    # at least one pinned violation repro and one clean pin
+    assert any(expect for _, _, expect, _ in ENTRIES)
+    assert any(not expect for _, _, expect, _ in ENTRIES)
+
+
+@pytest.mark.parametrize(
+    "path,scenario,expect,note",
+    ENTRIES,
+    ids=[p.stem for p, _, _, _ in ENTRIES])
+def test_corpus_entry_replays_exactly(path, scenario, expect, note):
+    first = run_scenario(scenario)
+    second = run_scenario(scenario)
+    assert first.trace == second.trace, \
+        f"{path.name}: corpus scenario is not deterministic"
+    got = sorted({violation_signature(v) for v in first.violations})
+    assert got == sorted(expect), (
+        f"{path.name}: expected violation classes {sorted(expect)}, "
+        f"got {got} ({note or 'no note'}); violations={first.violations}")

@@ -74,8 +74,10 @@ def test_infeasible_deadline_rejected_at_admission_without_decode():
     assert doomed.generated == []            # zero decode steps consumed
     assert fine.status == "done"
     assert rep.rejected == 1 and rep.completed == 1
-    # only the feasible request's steps ever ran
-    assert rep.decode_steps == fine.steps_total
+    # only the feasible request's steps ever ran (steps_total is 0 once
+    # a request is complete — it derives from replay state, not history)
+    assert rep.decode_steps == len(fine.prompt) + fine.max_new_tokens - 1
+    assert fine.steps_total == 0
     events = [e["event"] for e in driver.monitor.event_log
               if e.get("rid") == 0]
     assert events == ["request_rejected"]
@@ -203,3 +205,175 @@ def test_seeded_serve_campaign_invariants_hold():
     results = serve_campaign(8, base_seed=1234, check_determinism=True)
     bad = [(r.seed, r.violations) for r in results if not r.ok]
     assert not bad, bad
+
+
+# --------------------------------- decode-step accounting regressions --
+def test_steps_total_derives_from_replay_state():
+    """Regression: steps_total used to read only the original prompt, so
+    a failed-over request (recovered tokens teacher-forced back into the
+    feed) under-counted its remaining work in every backlog projection."""
+    fresh = _req(0, prompt_len=3, new=6)
+    assert fresh.steps_total == 3 + 6 - 1          # classic prefill+decode
+    recovered = _req(1, prompt_len=3, new=6)
+    recovered.generated = [7, 8]                   # survived a replica loss
+    # replay feeds prompt+recovered (5 tokens), then decodes the 4 left;
+    # the final step consumes the last feed slot AND emits the last token
+    assert recovered.steps_total == 5 + 4 - 1
+    finished = _req(2, prompt_len=3, new=2)
+    finished.generated = [1, 2]
+    assert finished.steps_total == 0               # nothing left to owe
+
+
+def test_steps_remaining_tracks_live_slot_state():
+    req = _req(0, prompt_len=3, new=6)
+    req.feed = list(req.prompt)
+    req.pos = 2                                    # mid-prefill
+    assert req.steps_remaining == (3 - 2) + 6 - 1
+    req.pos = 3
+    req.generated = [9, 9, 9]
+    assert req.steps_remaining == 3 - 1            # 3 tokens still to emit
+    req.generated = [9] * 6
+    assert req.steps_remaining == 0
+
+
+def test_backlog_steps_sums_queue_totals_and_occupant_remainders():
+    """Regression: each occupant used to contribute one phantom step to
+    the backlog (its final step double-counted), inflating admission's
+    queue-delay projection."""
+    driver = _driver(n_replicas=1, max_batch=1)
+    occupant = _req(0, prompt_len=3, new=8)
+    waiting = _req(1, prompt_len=2, new=4)
+    # seat the occupant mid-flight and queue the waiter
+    driver._slots["replica0"].admit(occupant)
+    occupant.pos = 2                              # two prefill steps done
+    driver.queue.push(waiting)
+    # occupant owes (3-2) feed + 8 new - 1 shared final step = 8;
+    # the waiter owes its full 2 + 4 - 1 = 5 from admission
+    assert occupant.steps_remaining == 8
+    assert waiting.steps_total == 5
+    assert driver.backlog_steps() == 13           # not 14: no phantom step
+    driver.shutdown()
+
+
+def test_failover_replay_steps_match_steps_total():
+    """After a mid-decode replica loss the requeued request's
+    steps_total equals the steps its replay actually consumes."""
+    driver = _driver(n_replicas=2, max_batch=1)
+    victim = _req(0, prompt_len=3, new=8)
+    rep = driver.serve_continuous(
+        [victim], arrivals=[0.0],
+        faults=[(0.05, "kill", "replica0")],
+        horizon=30.0)
+    driver.shutdown()
+    assert rep.completed == 1
+    assert victim.recoveries >= 1
+    assert len(victim.generated) == 8              # no token loss
+    # replay accounting: steps after recovery = what steps_total promised
+    # at requeue time (generated tokens teacher-forced, not re-decoded)
+    assert victim.status == "done"
+
+
+# ------------------------------------------- zero-slot admission gate --
+def test_total_outage_rejects_slo_requests_at_admission():
+    """Regression: with zero live replicas the old projection divided by
+    max(slots, 1) — one phantom slot — and admitted requests that could
+    not possibly start, let alone meet a deadline."""
+    clock = VirtualClock()
+    monitor = MonitoringDatabase(clock=clock, keep_event_log=True)
+    driver = _driver(clock=clock, monitor=monitor, n_replicas=2,
+                     max_batch=2,
+                     admission=SLOAdmissionPolicy(default_step_s=STEP_S))
+    slo = _req(0, prompt_len=3, new=4, deadline_s=5.0)
+    besteffort = _req(1, prompt_len=3, new=4)
+    rep = driver.serve_continuous(
+        [slo, besteffort], arrivals=[0.2, 0.25],
+        faults=[(0.05, "kill", "replica0"), (0.05, "kill", "replica1"),
+                (1.0, "restore", "replica0")],
+        horizon=30.0)
+    driver.shutdown()
+    # the SLO request arrived mid-outage: rejected at the door, no decode
+    assert slo.status == "rejected"
+    assert "no live decode slots" in slo.reason
+    assert slo.generated == []
+    # best-effort requests queue through the outage and finish after heal
+    assert besteffort.status == "done"
+    assert rep.rejected == 1 and rep.completed == 1
+
+
+def test_serve_scenarios_sample_total_outage_windows():
+    """The seeded sampler reaches the zero-slot regime: outage windows
+    kill the whole pool (floor replica included) and always heal."""
+    from repro.sim import ServeScenario, serve_campaign
+
+    results = serve_campaign(20, base_seed=0, check_determinism=True,
+                             scenario_kwargs={"outage_rate": 0.6})
+    bad = [(r.seed, r.violations) for r in results if not r.ok]
+    assert not bad, bad
+    outage = [r for r in results
+              if any(f.replica == "replica0" and f.kind == "kill"
+                     for f in r.scenario.faults)]
+    assert outage, "outage_rate=0.6 sampled no total outages in 20 seeds"
+    # rate 0.0 must leave pre-existing seeds byte-identical (gated RNG)
+    for seed in (0, 3, 11):
+        assert ServeScenario.random(seed) == ServeScenario.random(
+            seed, outage_rate=0.0)
+
+
+# ------------------------------------------------ autoscaler cooldown --
+def test_autoscaler_never_grows_back_to_back():
+    """Regression: after a grow the gauge window still held pre-decision
+    samples, so a sustained burst triggered a second grow on the very
+    next tick — two replicas for one backlog signal.  The post-decision
+    cooldown must keep load-following grows a full patience window apart
+    without changing what the run converges to."""
+    driver = _driver(
+        n_replicas=1, max_batch=2,
+        policy=[ReplicaAutoscaler(min_replicas=1, max_replicas=6,
+                                  patience=2, idle_ticks=3)])
+    reqs = [_req(i, prompt_len=4, new=8) for i in range(40)]
+    rep = driver.serve_continuous(reqs, arrivals=[0.0] * 40, horizon=60.0,
+                                  tick_period=0.1, drain_s=2.0)
+    events = [e for e in driver.monitor.event_log
+              if e["event"] == "autoscale_grow"
+              and e.get("reason") == "sustained backlog"]
+    driver.shutdown()
+    assert rep.completed == 40
+    assert len(events) >= 2                  # the burst still scales out
+    gaps = [b["time"] - a["time"] for a, b in zip(events, events[1:])]
+    assert all(g >= 2 * 0.1 - 1e-9 for g in gaps), gaps
+
+
+def test_autoscaler_cooldown_preserves_determinism():
+    scenario = ServeScenario(
+        seed=0, n_replicas=1, max_batch=2, step_s=STEP_S,
+        requests=[ServeRequestSpec(at=0.01 * i, prompt=(1, 2, 3, 4),
+                                   max_new_tokens=8)
+                  for i in range(24)],
+        admission=False, autoscale=True, max_replicas=4,
+        tick_period=0.1)
+    a = run_serve_scenario(scenario)
+    b = run_serve_scenario(scenario)
+    assert a.ok, a.violations
+    assert a.trace == b.trace
+    assert "autoscale_grow" in a.trace
+
+
+def test_autoscaler_capacity_repair_ignores_cooldown():
+    """Replica loss below the floor is repaired immediately even inside
+    a cooldown window — availability beats smoothing."""
+    driver = _driver(
+        n_replicas=2, max_batch=2,
+        policy=[ReplicaAutoscaler(min_replicas=2, max_replicas=6,
+                                  patience=2, idle_ticks=100,
+                                  cooldown_ticks=50)])
+    reqs = [_req(i, new=8) for i in range(10)]
+    rep = driver.serve_continuous(
+        reqs, arrivals=[0.02 * i for i in range(10)],
+        faults=[(0.15, "kill", "replica1")], horizon=60.0,
+        tick_period=0.1)
+    driver.shutdown()
+    assert rep.completed == 10
+    repairs = [e for e in driver.monitor.event_log
+               if e["event"] == "autoscale_grow"
+               and e.get("reason") == "below min_replicas"]
+    assert repairs                            # repaired despite cooldown

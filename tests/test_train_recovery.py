@@ -72,3 +72,37 @@ def test_checkpoint_resume_continuity(tmp_path):
     rep2 = sup2.run(20)
     assert rep2.steps_completed <= 10     # only the remaining steps ran
     assert rep2.losses[-1] <= rep1.losses[0]
+
+
+def test_elastic_host_join_reshards_live(tmp_path):
+    """A host joining mid-run becomes part of the data-parallel mesh on
+    the very next step — batch shards spread over one more host."""
+    sup = mk(tmp_path, "join")
+    rep = sup.run(20, events=[TrainEvent(step=5, kind="host_join",
+                                         host="host99")])
+    assert rep.final_hosts == 4           # 3 seed hosts + the joiner
+    assert rep.steps_completed == 20
+    assert rep.losses[-1] < rep.losses[0]
+    joins = [e for e in sup.monitor.system_events
+             if e["event"] == "host_join"]
+    assert joins and joins[0]["node"] == "host99"
+
+
+def test_elastic_host_leave_reshards_live(tmp_path):
+    """A decommissioned host drops out of the mesh without a recovery
+    event — leave is planned, not a failure."""
+    sup = mk(tmp_path, "leave")
+    rep = sup.run(20, events=[TrainEvent(step=5, kind="host_leave",
+                                         host="host02")])
+    assert rep.final_hosts == 2
+    assert rep.steps_completed == 20
+    assert rep.losses[-1] < rep.losses[0]
+
+
+def test_join_then_leave_round_trip(tmp_path):
+    sup = mk(tmp_path, "roundtrip")
+    rep = sup.run(20, events=[
+        TrainEvent(step=4, kind="host_join", host="hostX"),
+        TrainEvent(step=10, kind="host_leave", host="hostX")])
+    assert rep.final_hosts == 3           # back to the seed mesh
+    assert rep.steps_completed == 20

@@ -37,7 +37,6 @@ import math
 import socket
 import socketserver
 import threading
-import time
 from collections import defaultdict, deque
 from dataclasses import asdict, dataclass, field, is_dataclass
 from typing import Any
@@ -49,6 +48,7 @@ except Exception:  # pragma: no cover
     _HAS_PSUTIL = False
 
 from repro.core.failures import FailureReport
+from repro.engine.events import REAL_CLOCK
 
 
 # --------------------------------------------------------------------------
@@ -237,7 +237,7 @@ class NodeHealth:
     def silent_for(self, now: float | None = None) -> float:
         if not self.last_heartbeat:
             return 0.0
-        return max(0.0, (now if now is not None else time.time()) - self.last_heartbeat)
+        return max(0.0, (now if now is not None else REAL_CLOCK.time()) - self.last_heartbeat)
 
     def projected_mem_gb(self, horizon_s: float) -> float:
         """Memory in use projected ``horizon_s`` ahead along the trend."""
@@ -293,7 +293,7 @@ class MonitoringDatabase:
         # timestamp goes through it so a virtual-clock engine produces
         # virtual-time (and therefore deterministic) monitoring data
         self.clock = clock
-        self._time = clock.time if clock is not None else time.time
+        self._time = clock.time if clock is not None else REAL_CLOCK.time
         # optional global ordered log of every task/system event — the
         # deterministic-simulation plane's *event trace*.  Unbounded, so
         # only enabled for finite scenario runs.
@@ -588,10 +588,13 @@ class MonitoringDatabase:
 class SystemMonitoringAgent:
     """Heartbeat emitter for an arbitrary component (paper §IV)."""
 
-    def __init__(self, component: str, radio: Radio, period: float = 0.05):
+    def __init__(self, component: str, radio: Radio, period: float = 0.05,
+                 clock: Any = None):
         self.component = component
         self.radio = radio
         self.period = period
+        # injected time source for heartbeat stamps (real clock by default)
+        self.clock = clock if clock is not None else REAL_CLOCK
         self._stop = threading.Event()
         self._thread = threading.Thread(target=self._loop, daemon=True,
                                         name=f"sysmon-{component}")
@@ -603,8 +606,9 @@ class SystemMonitoringAgent:
     def _loop(self) -> None:
         while not self._stop.is_set():
             self.radio.send({"kind": "heartbeat", "node": self.component,
-                             "time": time.time()})
-            time.sleep(self.period)
+                             "time": self.clock.time()})
+            # Event.wait, not a raw sleep: stop() interrupts mid-period
+            self._stop.wait(self.period)
 
     def stop(self) -> None:
         self._stop.set()
@@ -652,7 +656,7 @@ class TaskMonitoringAgent:
         while not self._stop.is_set():
             self.radio.send({"kind": "resource_profile", "node": self.node.name,
                              "profile": self.sample()})
-            time.sleep(self.period)
+            self._stop.wait(self.period)
 
     def stop(self) -> None:
         self._stop.set()

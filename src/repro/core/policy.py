@@ -17,7 +17,6 @@ The engine is installed into the DFK as ``retry_handler=`` (paper §VI-B:
 """
 from __future__ import annotations
 
-import time
 
 from repro.core.categorization import Categorization, FailureCategorizationEngine
 from repro.core.failures import FailureReport
@@ -130,7 +129,9 @@ class ResiliencePolicyEngine:
         """
         if ctx.monitor is None:
             return
-        now = ctx.now() if hasattr(ctx, "now") else time.time()
+        # SchedulingContext.now() is the contract: clock-aware wall "now"
+        # with a REAL_CLOCK fallback — no hasattr hedge, no raw time.time()
+        now = ctx.now()
         beats = ctx.monitor.last_heartbeats()
         drained = getattr(ctx, "drained", None) or set()
         # sorted, not set order: denylist_remove events land in the monitor's

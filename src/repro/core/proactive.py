@@ -32,7 +32,7 @@ from __future__ import annotations
 
 import threading
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any
 
 from repro.core.failures import Layer
@@ -63,7 +63,8 @@ class ProactiveDecision:
     task_id: str | None = None
     node: str | None = None
     action: Action | None = None
-    time: float = field(default_factory=time.time)
+    # stamped from the engine's clock in ``_note`` (0.0 = never attached)
+    time: float = 0.0
 
 
 class ProactiveSentinel:

@@ -36,6 +36,7 @@ from repro.core.failures import (
     UlimitExceededError,
     WorkerLostError,
 )
+from repro.engine.events import REAL_CLOCK
 from repro.engine.task import TaskRecord, TaskState
 
 # thread-local handle letting task code discover which node it runs on
@@ -306,11 +307,14 @@ class Worker:
 
     _ids = 0
 
-    def __init__(self, node: Node, on_result: Callable[[TaskRecord, Any, BaseException | None, "Worker"], None]):
+    def __init__(self, node: Node, on_result: Callable[[TaskRecord, Any, BaseException | None, "Worker"], None],
+                 clock: Any = None):
         Worker._ids += 1
         self.worker_id = f"{node.name}/w{Worker._ids:04d}"
         self.node = node
         self.on_result = on_result
+        # injected time source for attempt start/end stamps
+        self.clock = clock if clock is not None else REAL_CLOCK
         self.alive = True
         self.busy = False  # True while executing a task (load metric input)
         self._thread = threading.Thread(target=self._loop, name=self.worker_id, daemon=True)
@@ -354,7 +358,7 @@ class Worker:
     def _run_one(self, rec: TaskRecord) -> None:
         node = self.node
         spec = rec.effective_resources()
-        rec.start_time = time.time()
+        rec.start_time = self.clock.time()
         # task-state lifecycle: the worker, not the executor, marks RUNNING —
         # the straggler watcher and node-loss sweep key off this transition.
         # READY is accepted too: under batched dispatch a worker can win the
@@ -383,7 +387,7 @@ class Worker:
         except BaseException as e:  # noqa: BLE001 - we must capture everything
             err = e
             err._wrath_traceback = traceback.format_exc()  # type: ignore[attr-defined]
-        rec.end_time = time.time()
+        rec.end_time = self.clock.time()
         self.on_result(rec, result, err, self)
 
 
@@ -418,7 +422,7 @@ class NodeManager:
         self._hb_thread.start()
 
     def spawn_worker(self) -> Worker:
-        w = Worker(self.node, self.on_result)
+        w = Worker(self.node, self.on_result, clock=self.clock)
         self.node.workers.append(w)
         w.start()
         return w
@@ -457,12 +461,13 @@ class NodeManager:
         while not self._stop.is_set():
             if self.node.healthy:
                 if self.heartbeat is not None and not self._hb_paused.is_set():
-                    now = self.clock.time() if self.clock is not None else time.time()
+                    now = (self.clock if self.clock is not None else REAL_CLOCK).time()
                     self.heartbeat(self.node.name, now)
                 # pilot-job managers track worker processes and respawn the
                 # dead (tasks queued behind a killed worker must not orphan)
                 self.restart_dead_workers()
-            time.sleep(self.heartbeat_period)
+            # Event.wait, not a raw sleep: stop() interrupts mid-period
+            self._stop.wait(self.heartbeat_period)
 
     def stop(self) -> None:
         self._stop.set()

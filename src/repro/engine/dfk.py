@@ -1212,7 +1212,7 @@ class DataFlowKernel:
         rec.record_attempt(node=node or "?", pool=pool or "?",
                            worker=getattr(worker, "worker_id", "?"),
                            ok=err is None, error=type(err).__name__ if err else None,
-                           duration=duration)
+                           duration=duration, now=self.clock.time())
         if self.monitor is not None:
             self.monitor.record_task_event(
                 tid, "finished" if err is None else "error",

@@ -44,8 +44,10 @@ class Clock:
     loop orders events by; ``time()`` is the wall-clock stamp used for
     bookkeeping (heartbeats, TTF, monitor events); ``wait(cond, timeout)``
     blocks the consumer until notified or until ``timeout`` of this
-    clock's seconds elapsed.  ``virtual`` marks clocks whose time advances
-    by decree rather than by the passage of real time.
+    clock's seconds elapsed; ``sleep(seconds)`` pauses the calling thread
+    for that many clock seconds (virtual clocks just jump forward).
+    ``virtual`` marks clocks whose time advances by decree rather than by
+    the passage of real time.
     """
 
     virtual: bool = False
@@ -58,6 +60,10 @@ class Clock:
 
     def wait(self, cond: threading.Condition, timeout: float) -> None:
         """Block on ``cond`` (held) for up to ``timeout`` clock seconds."""
+        raise NotImplementedError  # pragma: no cover - protocol
+
+    def sleep(self, seconds: float) -> None:
+        """Pause the calling thread for ``seconds`` of this clock's time."""
         raise NotImplementedError  # pragma: no cover - protocol
 
 
@@ -74,6 +80,9 @@ class RealClock(Clock):
 
     def wait(self, cond: threading.Condition, timeout: float) -> None:
         cond.wait(timeout=timeout)
+
+    def sleep(self, seconds: float) -> None:
+        time.sleep(seconds)
 
 
 #: Shared default clock — stateless, so one instance serves every engine.

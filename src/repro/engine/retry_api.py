@@ -12,6 +12,7 @@ from dataclasses import dataclass, field
 from typing import Any, Protocol
 
 from repro.core.failures import FailureReport
+from repro.engine.events import REAL_CLOCK
 
 
 class Action(enum.Enum):
@@ -73,10 +74,8 @@ class SchedulingContext:
 
     def now(self) -> float:
         """Wall-clock "now" on the engine's clock (real-time fallback)."""
-        if self.clock is not None:
-            return self.clock.time()
-        import time
-        return time.time()
+        clock = self.clock if self.clock is not None else REAL_CLOCK
+        return clock.time()
 
 
 def baseline_retry_handler(record, report: FailureReport, ctx: SchedulingContext) -> RetryDecision:

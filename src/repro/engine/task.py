@@ -22,6 +22,8 @@ from concurrent.futures._base import (
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from repro.engine.events import REAL_CLOCK
+
 
 class TaskState(enum.Enum):
     PENDING = "pending"        # waiting on dependencies
@@ -240,7 +242,8 @@ class TaskRecord:
         return ResourceSpec(**d)
 
     def record_attempt(self, *, node: str, pool: str, worker: str,
-                       ok: bool, error: str | None, duration: float) -> None:
+                       ok: bool, error: str | None, duration: float,
+                       now: float | None = None) -> None:
         if self.attempts is _NO_ATTEMPTS:
             self.attempts = []  # copy-on-write off the shared default
         self.attempts.append({
@@ -251,7 +254,7 @@ class TaskRecord:
             "ok": ok,
             "error": error,
             "duration": duration,
-            "time": time.time(),
+            "time": now if now is not None else REAL_CLOCK.time(),
         })
 
 
@@ -370,7 +373,7 @@ def new_task_record(
         kwargs=kwargs,
         resources=td.resources,
         max_retries=td.max_retries if td.max_retries is not None else default_retries,
-        submit_time=now if now is not None else time.time(),
+        submit_time=now if now is not None else REAL_CLOCK.time(),
     )
     rec.future = AppFuture(rec)
     return rec

@@ -47,7 +47,6 @@ DataFlowKernel's copy machinery and are inert here.
 from __future__ import annotations
 
 import dataclasses
-import time as _time
 
 from repro.core import MonitoringDatabase
 from repro.core.failures import FailureReport, HardwareShutdownError
@@ -396,7 +395,8 @@ class WrathServeDriver:
                     rec.record_attempt(node=replica.name, pool="serve",
                                        worker="-", ok=False,
                                        error=type(err).__name__,
-                                       duration=self.clock.now() - batch_t0)
+                                       duration=self.clock.now() - batch_t0,
+                                       now=self.clock.time())
                     self.monitor.record_task_placement(
                         "decode_batch", replica.name, "serve", ok=False)
                     report = FailureReport.from_exception(
@@ -556,7 +556,8 @@ class WrathServeDriver:
             if req._rec is not None:
                 req._rec.record_attempt(node=name, pool="serve", worker="-",
                                         ok=True, error=None,
-                                        duration=req.latency_s)
+                                        duration=req.latency_s,
+                                        now=self.clock.time())
             self.monitor.record_system_event(
                 "request_done", rid=req.rid, node=name,
                 latency_s=round(req.latency_s, 6))
@@ -578,7 +579,8 @@ class WrathServeDriver:
             rec = req._rec
             rec.record_attempt(node=node.name, pool="serve", worker="-",
                                ok=False, error=type(err).__name__,
-                               duration=now - req.arrival_t)
+                               duration=now - req.arrival_t,
+                               now=self.clock.time())
             self.monitor.record_task_placement("decode_step", node.name,
                                                "serve", ok=False)
             report = FailureReport.from_exception(
@@ -676,9 +678,9 @@ class WrathServeDriver:
                 events.run_until(deadline=self.clock.now() + drain_s)
         else:
             while not settled() and self.clock.now() < t_start + horizon:
-                _time.sleep(0.001)
+                self.clock.sleep(0.001)
             if drain_s > 0:
-                _time.sleep(drain_s)
+                self.clock.sleep(drain_s)
         tick.cancel()
         now = self.clock.now()
         for req in self.queue.drain("horizon reached"):

@@ -46,6 +46,10 @@ class VirtualClock(Clock):
         raise RuntimeError("VirtualClock cannot wait; drive the loop with "
                            "EventLoop.run_until() instead")
 
+    def sleep(self, seconds: float) -> None:
+        # a virtual sleep is just a jump: no thread ever blocks on it
+        self.advance(seconds)
+
     # -- virtual-time control ---------------------------------------------
     def advance_to(self, t: float) -> None:
         """Jump to virtual timestamp ``t`` (never backwards)."""

@@ -1,0 +1,30 @@
+"""CLK fixture: every way to read ambient time or global randomness.
+
+Parsed by the analyzer, never imported.  Line numbers are asserted by
+tests/test_analysis.py — append, don't insert.
+"""
+import random
+import time as _t
+from dataclasses import dataclass, field
+from datetime import datetime
+
+
+def stamp() -> float:
+    return _t.time()          # CLK001: raw wall clock, aliased import
+
+
+def nap() -> None:
+    _t.sleep(0.5)             # CLK002: raw sleep
+
+
+def when():
+    return datetime.now()     # CLK003: naive datetime via from-import
+
+
+def draw() -> float:
+    return random.random()    # CLK004: global shared-state RNG
+
+
+@dataclass
+class Entry:
+    t: float = field(default_factory=_t.time)   # CLK005: deferred time.time

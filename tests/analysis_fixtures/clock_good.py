@@ -1,0 +1,20 @@
+"""CLK parity fixture: the same jobs done with clock discipline."""
+import random
+import time
+
+
+def stamp(clock) -> float:
+    return clock.time()       # injected Clock: fine
+
+
+def elapsed(t0: float) -> float:
+    return time.monotonic() - t0    # monotonic measurement: allowed
+
+
+def profile(t0: float) -> float:
+    return time.perf_counter() - t0  # perf measurement: allowed
+
+
+def draw(seed: int) -> float:
+    rng = random.Random(seed)  # owned, seeded generator: the fix
+    return rng.random()

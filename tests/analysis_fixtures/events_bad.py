@@ -1,0 +1,14 @@
+"""EVT fixture: typo'd, unregistered, and unverifiable event names.
+
+Parsed by the analyzer, never imported.  Line numbers are asserted by
+tests/test_analysis.py — append, don't insert.
+"""
+
+
+def emit(monitor, kind: str) -> None:
+    monitor.record_task_event("t1", "submited")               # EVT001: typo
+    monitor.record_system_event("definitely_not_registered")  # EVT001
+    monitor.record_gauge("serve.queue_depht", 1.0)            # EVT001: typo
+    monitor.record_system_event(f"surprise_{kind}")           # EVT002: prefix
+    name = "dyn_" + kind
+    monitor.record_system_event(name)                         # EVT002: dynamic

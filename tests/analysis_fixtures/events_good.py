@@ -1,0 +1,9 @@
+"""EVT parity fixture: every registry-checkable emission shape."""
+
+
+def emit(monitor, kind: str, ok: bool) -> None:
+    monitor.record_task_event("t1", "submitted")          # registered literal
+    monitor.record_system_event("denylist_add", node="n")  # registered literal
+    monitor.record_gauge("serve.queue_depth", 3.0)        # registered gauge
+    monitor.record_system_event(f"fault_{kind}")          # registered family
+    monitor.record_task_event("t1", "finished" if ok else "error")  # both checked

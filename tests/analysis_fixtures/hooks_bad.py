@@ -1,0 +1,19 @@
+"""HOK fixture: raising hook override + unprotected direct invocation.
+
+Parsed by the analyzer, never imported (the base class is a stand-in:
+subclass detection is by terminal base name).  Line numbers are
+asserted by tests/test_analysis.py — append, don't insert.
+"""
+
+
+class ResiliencePolicy:
+    pass
+
+
+class BadPolicy(ResiliencePolicy):
+    def on_failure(self, record, report, ctx):
+        raise RuntimeError("boom")       # HOK002: raises into the stack
+
+
+def fire_unprotected(p, record, report, ctx):
+    return p.on_failure(record, report, ctx)   # HOK001: no degrade path

@@ -1,0 +1,21 @@
+"""HOK parity fixture: the sanctioned ways to invoke and write hooks."""
+
+
+class ResiliencePolicy:
+    pass
+
+
+class GoodPolicy(ResiliencePolicy):
+    def on_failure(self, record, report, ctx):
+        return None                      # decisions, not exceptions
+
+
+def fire_via_stack(stack, record, report, ctx):
+    return stack.on_failure(record, report, ctx)   # stack = the degrade path
+
+
+def fire_protected(p, record, report, ctx):
+    try:
+        return p.on_failure(record, report, ctx)   # local degrade path
+    except Exception:
+        return None

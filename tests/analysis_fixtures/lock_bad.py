@@ -1,0 +1,51 @@
+"""LCK fixture: callbacks, blocking, nesting, and a lock-order cycle.
+
+Parsed by the analyzer, never imported.  Line numbers are asserted by
+tests/test_analysis.py — append, don't insert.
+"""
+import threading
+import time
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._queue_mutex = threading.Lock()
+        self.policies = None
+
+    def finish_under_lock(self, fut):
+        with self._lock:
+            fut.set_result(1)          # LCK001: future resolution under lock
+
+    def blocking_under_lock(self, fut):
+        with self._lock:
+            fut.result()               # LCK002: blocks while holding the lock
+            time.sleep(0.1)            # LCK002 (and CLK002 to the clock checker)
+
+    def nested_acquire(self):
+        with self._lock:
+            with self._queue_mutex:    # LCK003: second lock while holding one
+                pass
+
+    def indirect_callback(self):
+        with self._lock:
+            self._notify()             # LCK001: reaches on_failure via _notify
+
+    def _notify(self):
+        self.policies.on_failure(None, None, None)
+
+
+class Tangle:
+    def __init__(self):
+        self._a_lock = threading.Lock()
+        self._b_lock = threading.Lock()
+
+    def ab(self):
+        with self._a_lock:
+            with self._b_lock:         # LCK003, order edge a -> b
+                pass
+
+    def ba(self):
+        with self._b_lock:
+            with self._a_lock:         # LCK003, order edge b -> a: LCK004 cycle
+                pass

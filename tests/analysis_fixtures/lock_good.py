@@ -1,0 +1,27 @@
+"""LCK parity fixture: the discipline the engine actually follows."""
+import threading
+
+
+class Engine:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._all_done = threading.Condition(self._lock)
+        self.pending = []
+        self.policies = None
+
+    def snapshot_then_callback(self):
+        with self._lock:
+            batch = list(self.pending)   # bookkeeping only under the lock
+            self.pending.clear()
+        for rec in batch:
+            self.policies.on_failure(rec, None, None)  # outside the lock
+
+    def wait_done(self):
+        with self._all_done:
+            # Condition.wait releases the lock it waits on: not blocking,
+            # and _all_done aliases _lock so this is not a nested acquire
+            self._all_done.wait(0.01)
+
+    def bookkeep(self):
+        with self._lock:
+            self.pending.append(object())
